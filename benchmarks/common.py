@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, CSV emission, bench-scale configs."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(parents=True, exist_ok=True)
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Print one ``name,us_per_call,derived`` CSV row (the harness contract)."""
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def save_json(name: str, obj):
+    (ART / f"{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+def bench_gnn_cfg(dataset: str, **kw):
+    """Mid-scale synthetic twin in the paper's regime: sampling-bound (3-hop
+    fanout over a denser graph, small model) so the pipeline modes have the
+    bottleneck structure the paper optimizes.  Cache sized ≈12% of features
+    (resource-constrained setting)."""
+    from repro.configs.gnn import gnn_config, DATASETS
+    ds = DATASETS[dataset]
+    nodes = 8_000
+    scale = nodes / ds["num_nodes"]
+    feat_mb = nodes * ds["feat_dim"] * 4 / 2**20
+    cfg = gnn_config(dataset).replace(
+        num_nodes=nodes,
+        num_edges=max(int(ds["num_edges"] * scale), 80_000),
+        hidden=32, batch_size=512, fanout=(15, 10, 5),
+        cache_volume_mb=max(feat_mb * 0.12, 0.5), **kw)
+    return cfg
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters

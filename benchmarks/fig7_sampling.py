@@ -1,0 +1,45 @@
+"""Fig. 7 reproduction: bias-rate γ sweep — cache hit rate ↑, epoch time ↓,
+accuracy cost ~1 point (sequential mode, static 40 MB-scaled cache)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, bench_gnn_cfg
+from repro.core.a3gnn import A3GNNTrainer
+from repro.graph.synthetic import dataset_like
+
+GAMMAS = (1.0, 2.0, 4.0, 8.0)
+STEPS = 14
+
+
+def run(quick: bool = False):
+    results = {}
+    datasets = ["products"] if quick else ["reddit", "products"]
+    for ds in datasets:
+        # paper's ablation setting: sequential mode, small static cache,
+        # 2-hop fanout (3-hop×512-seed neighborhoods saturate the scaled
+        # graph and mask the bias effect — hubs get sampled regardless)
+        cfg0 = bench_gnn_cfg(ds).replace(parallel_mode="seq",
+                                         batch_size=256, fanout=(10, 5),
+                                         cache_volume_mb=1.0)
+        graph = dataset_like(cfg0, seed=0)
+        sweep = {}
+        for g in GAMMAS:
+            tr = A3GNNTrainer(graph, cfg0.replace(bias_rate=g), seed=0)
+            r = tr.run_epochs(1, max_steps_per_epoch=STEPS, warmup_steps=3)
+            sweep[g] = {"hit_rate": r.cache_hit_rate,
+                        "epoch_time_s": 1.0 / max(r.throughput_epochs_s, 1e-9),
+                        "steps_s": r.throughput_steps_s,
+                        "acc": r.test_acc,
+                        "pred_acc_drop": tr.predicted_accuracy_drop(),
+                        "input_nodes": float(np.mean(
+                            [r.stats.peak_batch_bytes]))}
+            emit(f"fig7/{ds}/gamma={g}", 1e6 / max(r.throughput_steps_s, 1e-9),
+                 f"hit={r.cache_hit_rate:.3f};acc={r.test_acc:.3f}")
+        dh = sweep[GAMMAS[-1]]["hit_rate"] - sweep[1.0]["hit_rate"]
+        emit(f"fig7/{ds}/derived", 0.0,
+             f"hit_gain={dh:.3f};thr_gain="
+             f"{sweep[GAMMAS[-1]]['steps_s']/max(sweep[1.0]['steps_s'],1e-9):.2f}")
+        results[ds] = sweep
+    save_json("fig7", results)
+    return results

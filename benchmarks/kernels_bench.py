@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs XLA reference wall time on
+CPU — correctness-oriented here (TPU is the target; interpret mode executes
+the kernel body in Python).  The derived column reports allclose deltas."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.reservoir.ops import reservoir_topm
+from repro.kernels.gather.ops import cache_gather
+from repro.kernels.segment_agg.ops import neighbor_mean
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+
+    # reservoir
+    R, N, m = 64, 256, 15
+    w = jnp.asarray(rng.uniform(0.5, 4, (R, N)), jnp.float32)
+    u = jnp.asarray(rng.random((R, N)), jnp.float32)
+    mask = jnp.asarray(rng.random((R, N)) < 0.8)
+    i1, k1 = reservoir_topm(w, u, mask, m, use_pallas=True)
+    i2, k2 = reservoir_topm(w, u, mask, m, use_pallas=False)
+    ok = bool(np.array_equal(np.asarray(i1), np.asarray(i2)))
+    t_ref = timed(lambda: jax.block_until_ready(
+        reservoir_topm(w, u, mask, m, use_pallas=False)))
+    emit("kernel/reservoir/xla_ref", t_ref * 1e6, f"match={ok};R={R};N={N}")
+
+    # gather
+    C, F, n = 512, 512, 256
+    cache = jnp.asarray(rng.normal(0, 1, (C, F)), jnp.float32)
+    slots = jnp.asarray(rng.integers(-1, C, n), jnp.int32)
+    o1, _ = cache_gather(slots, cache, use_pallas=True)
+    o2, _ = cache_gather(slots, cache, use_pallas=False)
+    ok = bool(np.allclose(np.asarray(o1), np.asarray(o2)))
+    t_ref = timed(lambda: jax.block_until_ready(
+        cache_gather(slots, cache, use_pallas=False)))
+    emit("kernel/gather/xla_ref", t_ref * 1e6, f"match={ok};n={n};F={F}")
+
+    # segment aggregation
+    Nd, Ns, F = 128, 512, 256
+    h = jnp.asarray(rng.normal(0, 1, (Ns, F)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, Ns, (Nd, 10)), jnp.int32)
+    o1 = neighbor_mean(idx, h, use_pallas=True)
+    o2 = neighbor_mean(idx, h, use_pallas=False)
+    ok = bool(np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5))
+    t_ref = timed(lambda: jax.block_until_ready(
+        neighbor_mean(idx, h, use_pallas=False)))
+    emit("kernel/segment_agg/xla_ref", t_ref * 1e6, f"match={ok};Nd={Nd}")
+
+    # flash attention
+    B, S, H, Dh = 2, 256, 4, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, Dh)), jnp.float32)
+    o1 = flash_attention(q, k, v, use_pallas=True)
+    o2 = flash_attention(q, k, v, use_pallas=False)
+    err = float(np.abs(np.asarray(o1) - np.asarray(o2)).max())
+    t_ref = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, use_pallas=False)))
+    emit("kernel/flash_attention/xla_ref", t_ref * 1e6,
+         f"max_err={err:.2e};S={S}")

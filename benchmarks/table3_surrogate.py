@@ -1,0 +1,94 @@
+"""Tab. III reproduction: surrogate R² for throughput & memory prediction on
+reddit/yelp/products twins + PPO-vs-grid exploration efficiency (the 2.1×
+claim).  Ground truth comes from REAL pipeline profiling runs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, bench_gnn_cfg
+from repro.core.a3gnn import run_config
+from repro.core.autotune.space import Space
+from repro.core.autotune.surrogate import Surrogate
+from repro.core.autotune.ppo import PPOAgent, PPOConfig
+from repro.core.autotune.pareto import grid_search
+from repro.graph.synthetic import dataset_like
+
+STEPS = 6
+
+
+def profile_dataset(ds: str, n_samples: int, seed=0):
+    """Ground-truth profiling: run real configs, record (X, metrics)."""
+    cfg0 = bench_gnn_cfg(ds)
+    graph = dataset_like(cfg0, seed=0)
+    sp = Space()
+    rng = np.random.default_rng(seed)
+    X, thr, mem, acc = [], [], [], []
+    for u in sp.sample(rng, n_samples):
+        knobs = sp.decode(u)
+        cfg = cfg0.replace(
+            batch_size=min(knobs["batch_size"], 512),
+            bias_rate=knobs["bias_rate"],
+            workers=min(knobs["workers"], 4),
+            cache_volume_mb=min(knobs["cache_volume_mb"], 16.0),
+            parallel_mode=knobs["parallel_mode"])
+        r = run_config(graph, cfg, max_steps=STEPS, warmup_steps=2,
+                       simulate=True)
+        X.append(u)
+        thr.append(r.modeled_steps_s)
+        mem.append(r.memory_bytes)
+        acc.append(r.test_acc)
+    return (np.array(X), {"throughput": np.array(thr),
+                          "memory": np.array(mem),
+                          "accuracy": np.array(acc)})
+
+
+def run(quick: bool = False):
+    results = {}
+    datasets = ["products"] if quick else ["reddit", "yelp", "products"]
+    n = 24 if quick else 48
+    for ds in datasets:
+        X, Y = profile_dataset(ds, n)
+        k = int(0.75 * len(X))
+        s = Surrogate(n_trees=40).fit(X[:k], {m: v[:k] for m, v in Y.items()})
+        r2 = s.r2(X[k:], {m: v[k:] for m, v in Y.items()})
+        results[ds] = {"r2": r2, "n_profiles": n}
+        emit(f"table3/{ds}", 0.0,
+             f"r2_thr={r2['throughput']:.3f};r2_mem={r2['memory']:.3f};"
+             f"r2_acc={r2['accuracy']:.3f}")
+
+    # ---- PPO vs grid on the fitted surrogate (paper: 2.1× faster) ----
+    ds = datasets[-1]
+    X, Y = profile_dataset(ds, n)
+    sur = Surrogate(n_trees=40).fit(X, Y)
+    sp = Space()
+
+    def evaluate(cfg):
+        u = sp.encode(cfg)[None]
+        p = sur.predict(u)
+        return {k: float(v[0]) for k, v in p.items()}
+
+    w = {"throughput": 1.0, "memory": 1e-9, "accuracy": 0.5}
+    agent = PPOAgent(sp, evaluate, w, lambda m: True,
+                     PPOConfig(updates=24, horizon=8, seed=0))
+    t0 = time.perf_counter()
+    agent.run()
+    t_ppo = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, grid_best, grid_evals, _ = grid_search(sp, evaluate, agent.reward,
+                                              points_per_dim=3)
+    t_grid = time.perf_counter() - t0
+    to_match = next((i + 1 for i, (_, m, r) in enumerate(agent.history)
+                     if r >= grid_best * 0.9), None)
+    ratio = (grid_evals / to_match) if to_match else 0.0
+    results["ppo_vs_grid"] = {
+        "ppo_best": agent.best_reward, "grid_best": grid_best,
+        "ppo_evals": agent.evals, "grid_evals": grid_evals,
+        "ppo_evals_to_0.9grid": to_match, "explore_speedup": ratio,
+        "t_ppo_s": t_ppo, "t_grid_s": t_grid}
+    emit("table3/ppo_vs_grid", t_ppo * 1e6,
+         f"explore_speedup={ratio:.1f}x;ppo_best={agent.best_reward:.3f};"
+         f"grid_best={grid_best:.3f}")
+    save_json("table3", results)
+    return results

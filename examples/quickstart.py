@@ -1,0 +1,40 @@
+"""Quickstart: A³GNN in ~40 lines.
+
+Builds a synthetic products-like graph, trains GraphSAGE with
+locality-aware sampling + feature caching under each parallelism mode, and
+prints the paper's three metrics for each.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.gnn import gnn_config
+from repro.graph.synthetic import dataset_like
+from repro.core.a3gnn import A3GNNTrainer
+
+# 1. data: synthetic twin of ogbn-products (smoke scale for the demo)
+cfg = gnn_config("products", smoke=True).replace(
+    bias_rate=4.0,          # γ: prefer cached neighbors 4×
+    cache_volume_mb=0.15,   # Θ: device-side feature cache (~19% of features)
+    workers=2)
+graph = dataset_like(cfg, seed=0)
+print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
+      f"{graph.num_classes} classes")
+
+# 2. train under each parallelism mode (paper §III-B)
+for mode in ("seq", "mode2", "mode1"):
+    trainer = A3GNNTrainer(graph, cfg.replace(parallel_mode=mode), seed=0)
+    res = trainer.run_epochs(epochs=1, max_steps_per_epoch=15)
+    print(f"[{mode:5s}] thr={res.throughput_steps_s:6.2f} steps/s  "
+          f"mem={res.memory_bytes/2**20:7.1f} MiB  "
+          f"acc={res.test_acc:.3f}  cache-hit={res.cache_hit_rate:.2f}")
+
+# 3. the locality effect: γ=1 (uniform) vs γ=8 (strongly biased)
+for gamma in (1.0, 8.0):
+    trainer = A3GNNTrainer(graph, cfg.replace(bias_rate=gamma), seed=0)
+    res = trainer.run_epochs(epochs=1, max_steps_per_epoch=15)
+    print(f"[γ={gamma:3.0f}] cache-hit={res.cache_hit_rate:.3f}  "
+          f"acc={res.test_acc:.3f}")

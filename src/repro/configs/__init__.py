@@ -1,0 +1,12 @@
+"""Architecture registry.  Importing this package registers every assigned
+architecture (``--arch <id>``) plus the paper's own GNN training configs."""
+from repro.configs.base import (ModelConfig, ShapeConfig, get_config, list_archs,
+                                register, ALL_SHAPES, SHAPES_BY_NAME,
+                                applicable_shapes, TRAIN_4K, PREFILL_32K,
+                                DECODE_32K, LONG_500K)
+
+# arch modules register themselves on import
+from repro.configs import (minitron_8b, glm4_9b, llama3_2_3b, qwen3_4b,  # noqa: F401
+                           kimi_k2_1t_a32b, qwen2_moe_a2_7b, mamba2_1_3b,
+                           zamba2_7b, whisper_medium, qwen2_vl_2b)
+from repro.configs import gnn  # noqa: F401

@@ -1,0 +1,85 @@
+"""GNN training configs — the paper's own workload (A³GNN).
+
+One config per dataset family used in the paper's experiments (Tab. II /
+Fig. 6), backed by synthetic power-law graphs with matched statistics
+(offline container — see graph/synthetic.py and DESIGN.md §6.5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+from repro.configs.base import register
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    family: str = "gnn"
+    model: str = "graphsage"            # graphsage | gcn | gat
+    num_layers: int = 3
+    hidden: int = 256
+    feat_dim: int = 602                 # reddit-like default
+    num_classes: int = 41
+    fanout: Tuple[int, ...] = (15, 10, 5)
+    batch_size: int = 512
+    # dataset (synthetic power-law generator parameters)
+    num_nodes: int = 100_000
+    num_edges: int = 2_000_000
+    power_exp: float = 2.1              # degree power-law exponent
+    # --- A3GNN knobs (Table I design space) ---
+    bias_rate: float = 2.0              # γ ≥ 1; 1 → plain random sampling
+    cache_volume_mb: float = 40.0       # Θ
+    cache_policy: str = "static"        # static (hotness) | fifo
+    sampling_device: str = "cpu"        # cpu | device
+    workers: int = 2
+    parallel_mode: str = "seq"          # seq | mode1 | mode2
+    partitions: int = 1
+    # training
+    lr: float = 3e-3
+    dropout: float = 0.0
+    compute_dtype: str = "float32"
+
+    def replace(self, **kw) -> "GNNConfig":
+        return replace(self, **kw)
+
+
+def _dataset(name, nodes, edges, feat, classes, exp=2.1):
+    return dict(num_nodes=nodes, num_edges=edges, feat_dim=feat,
+                num_classes=classes, power_exp=exp)
+
+
+# Scaled-down synthetic twins of the paper's datasets (node/edge counts
+# scaled ~25× down to fit the CPU container; density ratios preserved).
+DATASETS = {
+    "reddit": _dataset("reddit", 93_000, 4_600_000, 602, 41, 1.9),
+    "products": _dataset("products", 98_000, 2_470_000, 100, 47, 2.2),
+    "arxiv": _dataset("arxiv", 68_000, 466_000, 128, 40, 2.4),
+    "amazon": _dataset("amazon", 63_000, 10_570_000, 200, 107, 1.8),
+    "yelp": _dataset("yelp", 29_000, 800_000, 300, 100, 2.0),
+}
+
+# smoke-scale (unit tests / CI)
+DATASETS_SMOKE = {
+    k: dict(v, num_nodes=2_000, num_edges=20_000) for k, v in DATASETS.items()
+}
+
+
+def gnn_config(dataset: str = "products", smoke: bool = False, **kw) -> GNNConfig:
+    ds = (DATASETS_SMOKE if smoke else DATASETS)[dataset]
+    base = GNNConfig(name=f"graphsage-{dataset}" + ("-smoke" if smoke else ""),
+                     **ds)
+    if smoke:
+        base = base.replace(hidden=32, batch_size=64, fanout=(5, 5),
+                            num_layers=2, cache_volume_mb=1.0)
+    return base.replace(**kw) if kw else base
+
+
+@register("graphsage-products")
+def _products(smoke: bool = False):
+    return gnn_config("products", smoke)
+
+
+@register("graphsage-reddit")
+def _reddit(smoke: bool = False):
+    return gnn_config("reddit", smoke)

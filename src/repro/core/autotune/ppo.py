@@ -1,0 +1,191 @@
+"""PPO-based design-space exploration (paper Algo. 3).
+
+MDP: state s = [config p, predicted metrics m]; action a = bounded delta on
+the normalized config vector; reward R = wᵀm (task-priority weights) with a
+large negative penalty outside hardware constraints.  Gaussian policy +
+value MLP in pure JAX, clipped-objective PPO with GAE(λ)/TD value targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune.space import Space
+
+VIOLATION_REWARD = -100.0      # "-inf" of Algo. 3, kept finite for stability
+
+
+def _mlp_init(rng, sizes):
+    params = []
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for k, (i, o) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        params.append({"w": jax.random.normal(k, (i, o)) / np.sqrt(i),
+                       "b": jnp.zeros(o)})
+    return params
+
+
+def _mlp(params, x):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+@dataclass
+class PPOConfig:
+    action_scale: float = 0.3
+    clip_eps: float = 0.2
+    gamma: float = 0.95
+    lam: float = 0.9
+    lr: float = 5e-3
+    epochs_per_update: int = 4
+    horizon: int = 16
+    updates: int = 20
+    hidden: int = 64
+    init_log_std: float = -0.7
+    seed: int = 0
+
+
+class PPOAgent:
+    """Explores the space against a (surrogate) evaluator.
+
+    ``evaluate(cfg_dict) -> {"throughput","memory","accuracy"}``
+    ``constraint(metrics) -> bool`` — True if feasible.
+    """
+
+    def __init__(self, space: Space, evaluate: Callable[[Dict], Dict],
+                 w: Dict[str, float], constraint: Callable[[Dict], bool],
+                 cfg: PPOConfig = PPOConfig()):
+        self.space = space
+        self.evaluate = evaluate
+        self.w = w
+        self.constraint = constraint
+        self.cfg = cfg
+        rng = jax.random.PRNGKey(cfg.seed)
+        k1, k2, self._key = jax.random.split(rng, 3)
+        sdim = space.dim + 3                      # state = config ⊕ metrics
+        self.pi = _mlp_init(k1, [sdim, cfg.hidden, cfg.hidden, space.dim])
+        self.log_std = jnp.full(space.dim, cfg.init_log_std)
+        self.vf = _mlp_init(k2, [sdim, cfg.hidden, cfg.hidden, 1])
+        self.best_cfg: Optional[Dict] = None
+        self.best_u: Optional[np.ndarray] = None
+        self.best_reward = -np.inf
+        self.history: List[Tuple[Dict, Dict, float]] = []
+        self.evals = 0
+
+    # -- reward --------------------------------------------------------------
+    def reward(self, metrics: Dict) -> float:
+        if not self.constraint(metrics):
+            return VIOLATION_REWARD
+        m = np.array([metrics["throughput"], -metrics["memory"],
+                      metrics["accuracy"]])
+        wv = np.array([self.w.get("throughput", 0.0), self.w.get("memory", 0.0),
+                       self.w.get("accuracy", 0.0)])
+        return float(wv @ m)
+
+    def _metrics_vec(self, metrics: Dict) -> np.ndarray:
+        return np.array([np.log(max(metrics["throughput"], 1e-9)),
+                         np.log(max(metrics["memory"], 1.0)) / 20.0,
+                         metrics["accuracy"]])
+
+    def _state(self, u: np.ndarray, metrics: Dict) -> np.ndarray:
+        return np.concatenate([u, self._metrics_vec(metrics)])
+
+    # -- rollout -------------------------------------------------------------
+    def _rollout(self, u0: np.ndarray):
+        cfgc = self.cfg
+        states, actions, logps, rewards, values = [], [], [], [], []
+        u = u0.copy()
+        cfg0 = self.space.decode(u)
+        metrics = self.evaluate(cfg0)
+        self.evals += 1
+        r0 = self.reward(metrics)
+        self.history.append((cfg0, metrics, r0))
+        if r0 > self.best_reward:
+            self.best_reward, self.best_cfg, self.best_u = r0, cfg0, u.copy()
+        for _ in range(cfgc.horizon):
+            s = self._state(u, metrics)
+            self._key, k = jax.random.split(self._key)
+            mu = np.asarray(_mlp(self.pi, jnp.asarray(s)))
+            std = np.exp(np.asarray(self.log_std))
+            a = mu + std * np.asarray(jax.random.normal(k, (self.space.dim,)))
+            logp = float(-0.5 * (((a - mu) / std) ** 2
+                                 + 2 * np.log(std) + np.log(2 * np.pi)).sum())
+            v = float(np.asarray(_mlp(self.vf, jnp.asarray(s)))[0])
+            # apply action (Algo. 3 line 4: clip to valid range)
+            u = self.space.clip(u + cfgc.action_scale * np.tanh(a))
+            cfg_dict = self.space.decode(u)
+            metrics = self.evaluate(cfg_dict)
+            self.evals += 1
+            r = self.reward(metrics)
+            self.history.append((cfg_dict, metrics, r))
+            if r > self.best_reward:
+                self.best_reward, self.best_cfg = r, cfg_dict
+                self.best_u = u.copy()
+            states.append(s)
+            actions.append(a)
+            logps.append(logp)
+            rewards.append(r)
+            values.append(v)
+        return (np.array(states), np.array(actions), np.array(logps),
+                np.array(rewards), np.array(values))
+
+    # -- PPO update ----------------------------------------------------------
+    def _update(self, batch):
+        s, a, logp_old, ret, adv = [jnp.asarray(x) for x in batch]
+        cfgc = self.cfg
+
+        def loss_fn(pi, log_std, vf):
+            mu = jax.vmap(lambda x: _mlp(pi, x))(s)
+            std = jnp.exp(log_std)
+            logp = (-0.5 * (((a - mu) / std) ** 2 + 2 * log_std
+                            + jnp.log(2 * jnp.pi))).sum(-1)
+            ratio = jnp.exp(logp - logp_old)
+            adv_n = (adv - adv.mean()) / (adv.std() + 1e-8)
+            l_clip = -jnp.mean(jnp.minimum(
+                ratio * adv_n,
+                jnp.clip(ratio, 1 - cfgc.clip_eps, 1 + cfgc.clip_eps) * adv_n))
+            v = jax.vmap(lambda x: _mlp(vf, x))(s)[:, 0]
+            l_v = jnp.mean((v - ret) ** 2)
+            return l_clip + 0.5 * l_v - 0.001 * jnp.mean(log_std)
+
+        grads = jax.grad(loss_fn, argnums=(0, 1, 2))(self.pi, self.log_std,
+                                                     self.vf)
+        self.pi = jax.tree.map(lambda p, g: p - cfgc.lr * g, self.pi, grads[0])
+        self.log_std = jnp.clip(self.log_std - cfgc.lr * grads[1], -2.5, 0.0)
+        self.vf = jax.tree.map(lambda p, g: p - cfgc.lr * g, self.vf, grads[2])
+
+    def _gae(self, rewards, values):
+        cfgc = self.cfg
+        adv = np.zeros_like(rewards)
+        last = 0.0
+        for t in reversed(range(len(rewards))):
+            nxt = values[t + 1] if t + 1 < len(values) else 0.0
+            delta = rewards[t] + cfgc.gamma * nxt - values[t]
+            last = delta + cfgc.gamma * cfgc.lam * last
+            adv[t] = last
+        return adv, adv + values
+
+    # -- main loop (Algo. 3) ---------------------------------------------------
+    def run(self, rng: Optional[np.random.Generator] = None) -> Dict:
+        rng = rng or np.random.default_rng(self.cfg.seed)
+        for upd in range(self.cfg.updates):
+            # explore from a fresh random config half the time; otherwise
+            # continue the trajectory from the incumbent (Algo. 3 keeps
+            # refining p* while the clipped policy update keeps exploring)
+            if self.best_u is None or upd % 2 == 0:
+                u0 = rng.random(self.space.dim)
+            else:
+                u0 = self.space.clip(self.best_u
+                                     + 0.05 * rng.standard_normal(self.space.dim))
+            s, a, logp, r, v = self._rollout(u0)
+            adv, ret = self._gae(r, v)
+            for _ in range(self.cfg.epochs_per_update):
+                self._update((s, a, logp, ret, adv))
+        return self.best_cfg

@@ -1,0 +1,103 @@
+"""Device-side feature cache (paper's feature-cache module).
+
+Maintains a *device map* (node id → cache slot, -1 = miss) enabling both
+O(1) lookup during batch generation and the locality-aware sampler's bias
+(cached ids get weight γ).  Policies:
+
+  * ``static``  — preload hottest nodes (out-degree order, PaGraph-style)
+  * ``fifo``    — dynamic ring-buffer replacement (BGL/GNNavigator-style)
+
+On the TPU adaptation the cache rows live in device HBM and misses are
+host→device DMA; here storage is a pinned numpy array and we count
+hit/miss traffic exactly (benchmarks derive PCIe-volume savings from it).
+The Pallas gather kernel (kernels/gather) implements the device-side
+cached-row gather for the real-TPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.graph.storage import Graph
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_from_cache: int = 0
+    bytes_from_host: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+    def reset(self):
+        self.hits = self.misses = self.evictions = 0
+        self.bytes_from_cache = self.bytes_from_host = 0
+
+
+class FeatureCache:
+    def __init__(self, graph: Graph, volume_mb: float, policy: str = "static",
+                 seed: int = 0):
+        self.g = graph
+        self.policy = policy
+        row_bytes = graph.feat_dim * 4
+        self.capacity = max(int(volume_mb * 2**20 / row_bytes), 0)
+        self.capacity = min(self.capacity, graph.num_nodes)
+        self.device_map = -np.ones(graph.num_nodes, dtype=np.int32)
+        self.storage = np.zeros((self.capacity, graph.feat_dim), np.float32)
+        self.slot_owner = -np.ones(self.capacity, dtype=np.int64)
+        self.stats = CacheStats()
+        self._fifo_head = 0
+        if policy == "static" and self.capacity:
+            hot = graph.hotness_order()[:self.capacity]
+            self.storage[:len(hot)] = graph.features[hot]
+            self.device_map[hot] = np.arange(len(hot), dtype=np.int32)
+            self.slot_owner[:len(hot)] = hot
+
+    # -- lookups ------------------------------------------------------------
+    def is_cached(self, ids: np.ndarray) -> np.ndarray:
+        return self.device_map[ids] >= 0
+
+    def volume_bytes(self) -> int:
+        return self.storage.nbytes
+
+    # -- fetch --------------------------------------------------------------
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """Gather features for ``ids`` through the cache, updating stats
+        (and, for FIFO, inserting missed rows)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        slots = self.device_map[ids]
+        hit = slots >= 0
+        out = np.empty((len(ids), self.g.feat_dim), np.float32)
+        if hit.any():
+            out[hit] = self.storage[slots[hit]]
+        miss_ids = ids[~hit]
+        if len(miss_ids):
+            out[~hit] = self.g.features[miss_ids]
+        row_bytes = self.g.feat_dim * 4
+        self.stats.hits += int(hit.sum())
+        self.stats.misses += int(len(ids) - hit.sum())
+        self.stats.bytes_from_cache += int(hit.sum()) * row_bytes
+        self.stats.bytes_from_host += int(len(miss_ids)) * row_bytes
+        if self.policy == "fifo" and self.capacity and len(miss_ids):
+            self._fifo_insert(np.unique(miss_ids))
+        return out
+
+    def _fifo_insert(self, ids: np.ndarray):
+        for v in ids:
+            slot = self._fifo_head
+            old = self.slot_owner[slot]
+            if old >= 0:
+                self.device_map[old] = -1
+                self.stats.evictions += 1
+            self.slot_owner[slot] = v
+            self.device_map[v] = slot
+            self.storage[slot] = self.g.features[v]
+            self._fifo_head = (self._fifo_head + 1) % self.capacity

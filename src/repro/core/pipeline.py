@@ -1,0 +1,212 @@
+"""Multi-level parallelism scheduling (paper §III-B, Fig. 4).
+
+Three executors over the Algo.-1 stages (sample → batch-generate → train):
+
+  * ``seq``    — one stage at a time; minimum memory, minimum throughput.
+  * ``mode1``  — n workers each run (sample + batch-generate) and feed a
+    bounded queue; the consumer trains.  Max throughput, n× working-set
+    duplication (Eq. 3).
+  * ``mode2``  — n workers run sampling only; batch generation (the
+    contention-heavy stage: cache read/write) + training stay serialized on
+    the consumer (Eq. 4/5).
+
+On the host-TPU adaptation workers are threads (numpy sampling releases the
+GIL in the hot gather ops) and the bounded queue doubles as the
+double-buffer: while the device runs step k, workers prepare k+1.  Worker
+failures are tolerated: a heartbeat thread re-issues the failed seed batch
+(fault_tolerance.py provides the same machinery for the LM trainer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cache import FeatureCache
+from repro.core.sampling import NeighborSampler, MiniBatch, seed_loader
+from repro.graph.batch import generate_batch, batch_device_arrays, batch_bytes
+
+
+@dataclass
+class PipelineStats:
+    steps: int = 0
+    t_sample: float = 0.0
+    t_batch: float = 0.0
+    t_train: float = 0.0
+    t_wall: float = 0.0
+    peak_batch_bytes: int = 0
+    queue_peak: int = 0
+    losses: List[float] = field(default_factory=list)
+    accs: List[float] = field(default_factory=list)
+    reissued: int = 0
+
+    def stage_times(self):
+        from repro.core.perf_model import StageTimes
+        n = max(self.steps, 1)
+        return StageTimes(self.t_sample / n, self.t_batch / n, self.t_train / n)
+
+    def throughput_steps_per_s(self) -> float:
+        return self.steps / self.t_wall if self.t_wall else 0.0
+
+
+class _SampleWorker(threading.Thread):
+    """Pulls seed batches from an index queue, produces (mini)batches."""
+
+    def __init__(self, wid, sampler, cache, graph, in_q, out_q, stats_lock,
+                 stats, do_batchgen, heartbeat, fail_after=None):
+        super().__init__(daemon=True)
+        self.wid = wid
+        self.sampler, self.cache, self.graph = sampler, cache, graph
+        self.in_q, self.out_q = in_q, out_q
+        self.stats_lock, self.stats = stats_lock, stats
+        self.do_batchgen = do_batchgen
+        self.heartbeat = heartbeat
+        self.fail_after = fail_after        # fault-injection for tests
+        self._count = 0
+
+    def run(self):
+        while True:
+            item = self.in_q.get()
+            if item is None:
+                self.in_q.task_done()
+                break
+            idx, seeds = item
+            try:
+                if self.fail_after is not None and self._count >= self.fail_after:
+                    raise RuntimeError(f"injected failure in worker {self.wid}")
+                t0 = time.perf_counter()
+                mb = self.sampler.sample(seeds)
+                t1 = time.perf_counter()
+                if self.do_batchgen:
+                    mb = generate_batch(mb, self.cache, self.graph)
+                t2 = time.perf_counter()
+                with self.stats_lock:
+                    self.stats.t_sample += t1 - t0
+                    self.stats.t_batch += t2 - t1
+                self.heartbeat[self.wid] = time.time()
+                self._count += 1
+                self.out_q.put((idx, seeds, mb))
+            except Exception:  # noqa: BLE001 — re-queue the work item
+                self.heartbeat[self.wid] = -1.0   # mark dead
+                self.out_q.put((idx, seeds, None))
+            finally:
+                self.in_q.task_done()
+
+
+class Pipeline:
+    """Executes one epoch (or ``max_steps``) under a given mode."""
+
+    def __init__(self, graph, cfg, train_fn: Callable[[MiniBatch], tuple],
+                 cache: Optional[FeatureCache] = None,
+                 weight_fn=None, seed: int = 0):
+        self.graph, self.cfg = graph, cfg
+        self.train_fn = train_fn
+        self.cache = cache
+        self.weight_fn = weight_fn
+        self.seed = seed
+
+    def _make_sampler(self, s=0):
+        return NeighborSampler(self.graph, self.cfg.fanout,
+                               weight_fn=self.weight_fn, seed=self.seed + s)
+
+    # ------------------------------------------------------------------
+    def run(self, mode: Optional[str] = None, max_steps: Optional[int] = None,
+            fail_worker: Optional[int] = None) -> PipelineStats:
+        mode = mode or self.cfg.parallel_mode
+        if mode == "seq":
+            return self._run_seq(max_steps)
+        return self._run_parallel(mode, max_steps, fail_worker)
+
+    # ------------------------------------------------------------------
+    def _run_seq(self, max_steps) -> PipelineStats:
+        stats = PipelineStats()
+        sampler = self._make_sampler()
+        t_start = time.perf_counter()
+        for seeds in seed_loader(self.graph, self.cfg.batch_size, self.seed):
+            if max_steps is not None and stats.steps >= max_steps:
+                break
+            t0 = time.perf_counter()
+            mb = sampler.sample(seeds)
+            t1 = time.perf_counter()
+            mb = generate_batch(mb, self.cache, self.graph)
+            t2 = time.perf_counter()
+            loss, acc = self.train_fn(mb)
+            t3 = time.perf_counter()
+            stats.t_sample += t1 - t0
+            stats.t_batch += t2 - t1
+            stats.t_train += t3 - t2
+            stats.steps += 1
+            stats.losses.append(float(loss))
+            stats.accs.append(float(acc))
+            stats.peak_batch_bytes = max(stats.peak_batch_bytes, batch_bytes(mb))
+        stats.t_wall = time.perf_counter() - t_start
+        return stats
+
+    # ------------------------------------------------------------------
+    def _run_parallel(self, mode: str, max_steps, fail_worker) -> PipelineStats:
+        n = max(self.cfg.workers, 1)
+        stats = PipelineStats()
+        lock = threading.Lock()
+        in_q: queue.Queue = queue.Queue()
+        out_q: queue.Queue = queue.Queue(maxsize=2 * n)   # bounded double-buffer
+        heartbeat: Dict[int, float] = {}
+        do_batchgen = (mode == "mode1")
+
+        workers = []
+        for w in range(n):
+            fa = None
+            if fail_worker is not None and w == fail_worker:
+                fa = 2                                     # fail after 2 batches
+            wk = _SampleWorker(w, self._make_sampler(w), self.cache, self.graph,
+                               in_q, out_q, lock, stats, do_batchgen,
+                               heartbeat, fail_after=fa)
+            wk.start()
+            workers.append(wk)
+
+        seed_batches = list(seed_loader(self.graph, self.cfg.batch_size,
+                                        self.seed))
+        if max_steps is not None:
+            seed_batches = seed_batches[:max_steps]
+        for i, seeds in enumerate(seed_batches):
+            in_q.put((i, seeds))
+
+        spare = self._make_sampler(997)                    # straggler/failure spare
+        t_start = time.perf_counter()
+        done = 0
+        while done < len(seed_batches):
+            idx, seeds, mb = out_q.get()
+            stats.queue_peak = max(stats.queue_peak, out_q.qsize())
+            if mb is None:                                 # failed worker → re-issue
+                stats.reissued += 1
+                t0 = time.perf_counter()
+                mb = spare.sample(seeds)
+                mb = generate_batch(mb, self.cache, self.graph)
+                with lock:
+                    stats.t_sample += time.perf_counter() - t0
+            elif not do_batchgen:                          # mode2: serialize batchgen
+                t0 = time.perf_counter()
+                mb = generate_batch(mb, self.cache, self.graph)
+                with lock:
+                    stats.t_batch += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            loss, acc = self.train_fn(mb)
+            t1 = time.perf_counter()
+            with lock:
+                stats.t_train += t1 - t0
+                stats.steps += 1
+                stats.losses.append(float(loss))
+                stats.accs.append(float(acc))
+                stats.peak_batch_bytes = max(stats.peak_batch_bytes,
+                                             batch_bytes(mb))
+            done += 1
+        stats.t_wall = time.perf_counter() - t_start
+        for _ in workers:
+            in_q.put(None)
+        for wk in workers:
+            wk.join(timeout=5)
+        return stats

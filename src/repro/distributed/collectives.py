@@ -1,0 +1,67 @@
+"""Explicit collectives built on shard_map: flash-decoding attention combine
+and quantized reductions (compression lives in train/compression.py).
+
+These are the hand-written alternatives to GSPMD's automatic choices —
+used when the automatic partitioner picks a bad schedule (e.g. gathering a
+sequence-sharded KV cache instead of combining partial softmaxes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _partial_attend(q, k, v, mask):
+    """Local attention over this shard's time slice.
+
+    q (B,H,Dh); k/v (B,Tl,H,Dh); mask (B,Tl) True=valid.
+    Returns (o (B,H,Dh) UNNORMALIZED numerator at local max, m (B,H) local
+    max, denom (B,H) local sum of exp)."""
+    scores = jnp.einsum("bhe,bthe->bht", q, k).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1)                        # (B,H)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1)                         # (B,H)
+    o = jnp.einsum("bht,bthe->bhe", p.astype(v.dtype), v)
+    return o.astype(jnp.float32), m, denom
+
+
+def flash_decode_attention(mesh: Mesh, axis: str = "model"):
+    """Sequence-sharded single-token attention with psum softmax combine.
+
+    Inputs (global): q (B,H,Dh) replicated over ``axis``; cache_k/v
+    (B,T,H,Dh) sharded on T over ``axis``; pos (B,) replicated.
+    Output: (B,H,Dh) replicated — each shard attends over its T-slice and
+    the partial (o·softmax-weight, lse) pairs combine with one psum instead
+    of all-gathering the cache (bytes: B·H·Dh vs B·T·H·Dh/axis).
+    """
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def local(q, k, v, pos):
+        Tl = k.shape[1]
+        shard = jax.lax.axis_index(axis)
+        base = shard * Tl
+        mask = (base + jnp.arange(Tl))[None, :] <= pos[:, None]
+        o, m, denom = _partial_attend(q, k, v, mask)
+        g_max = jax.lax.pmax(m, axis)                   # (B,H) global max
+        w = jnp.exp(m - g_max)                          # rescale to global max
+        num = jax.lax.psum(o * w[..., None], axis)
+        den = jax.lax.psum(denom * w, axis)
+        return (num / jnp.maximum(den[..., None], 1e-30)).astype(v.dtype)
+
+    in_specs = (P(), P(None, axis, None, None), P(None, axis, None, None), P())
+    return shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                     check_rep=False)
+
+
+def quantized_allreduce_bytes(shape, n_devices: int, bits: int = 8) -> float:
+    """Analytic DCN volume of a compressed ring all-reduce (roofline helper)."""
+    import numpy as np
+    elems = float(np.prod(shape))
+    payload = elems * bits / 8
+    return 2.0 * payload * (n_devices - 1) / n_devices

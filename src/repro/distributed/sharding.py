@@ -1,0 +1,190 @@
+"""Logical→physical sharding resolution.
+
+The model zoo declares shardings with *logical* axis names (params.py).
+This module resolves them against a concrete mesh, per architecture:
+
+  * ``fsdp``   → the ``data`` mesh axis (ZeRO-3 parameter sharding).  On a
+    multi-pod mesh parameters stay sharded *within* a pod and replicated
+    across pods (cross-pod is pure DP over the slower DCN links — gradient
+    all-reduce only, optionally compressed; see train/compression.py).
+  * ``tp``     → the ``model`` mesh axis.
+  * ``tp_kv``  → ``model`` iff num_kv_heads divides the model-axis size,
+    else replicated (Megatron-style KV replication for GQA).
+  * ``expert`` → the ``model`` mesh axis (EP).  Requires padded expert
+    count divisible by the axis (configs pad, e.g. 60→64).
+  * ``dp``     → ``("pod","data")`` on multi-pod meshes else ``data``.
+  * ``kvseq``  → ``model`` when the config selects sequence-sharded KV
+    (kv_shard=="sequence" or auto with kv heads indivisible), else None.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import tree_map_decls, ParamDecl
+
+
+def make_rules(cfg, mesh: Mesh) -> Dict[str, Any]:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = axis_sizes.get("model", 1)
+    multi_pod = "pod" in axis_sizes
+
+    kv_heads = getattr(cfg, "num_kv_heads", 0) or 0
+    q_heads = getattr(cfg, "num_heads", 0) or 0
+    if getattr(cfg, "pad_head_groups", False) and kv_heads:
+        from repro.models.layers import padded_heads
+        q_heads = padded_heads(cfg, model_size)
+    kv_div = kv_heads > 0 and kv_heads % model_size == 0
+    q_div = q_heads > 0 and q_heads % model_size == 0
+    kv_shard = getattr(cfg, "kv_shard", "auto")
+    if kv_shard == "auto":
+        kv_shard = "heads" if kv_div else "sequence"
+    if kv_shard == "replicated":
+        kv_shard = "none"
+
+    rules: Dict[str, Any] = {
+        "dp": ("pod", "data") if multi_pod else "data",
+        "fsdp": "data" if getattr(cfg, "fsdp_params", True) else None,
+        "tp": "model",
+        "tp_kv": "model" if kv_div else None,
+        "qheads": "model" if q_div else None,
+        "expert": "model",
+        "kvseq": "model" if kv_shard == "sequence" else None,
+        # kv-head axis of the decode cache: shardable only in heads mode
+        "kvheads": "model" if (kv_shard == "heads" and kv_div) else None,
+        # decode: repeated-KV layout — shard time XOR heads, never both
+        "dkr_t": "model" if kv_shard == "sequence" else None,
+        "dkr_h": "model" if (kv_shard != "sequence" and q_div) else None,
+        "seq": None,            # training activations: sequence replicated
+        "vocab": ("model"
+                  if getattr(cfg, "vocab_size", 0) % model_size == 0 else None),
+    }
+    return rules
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axes, 1)
+
+
+def enforce_divisible(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axis doesn't divide evenly (pjit
+    argument shardings require exact divisibility, unlike constraints)."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def resolve_spec(logical: P, rules: Dict[str, Any]) -> P:
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, (tuple, list)):
+            phys = []
+            for a in ax:
+                r = rules.get(a, None)
+                if r is None:
+                    continue
+                phys.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(phys) if phys else None)
+        else:
+            out.append(rules.get(ax, None))
+    # PartitionSpec drops trailing Nones automatically
+    return P(*out)
+
+
+def physical_specs(decls_or_logical, cfg, mesh: Mesh):
+    """Resolve a pytree of ParamDecl (or logical PartitionSpec) to physical
+    specs, dropping any sharding that does not divide the dim evenly."""
+    rules = make_rules(cfg, mesh)
+
+    def one(x):
+        if isinstance(x, ParamDecl):
+            return enforce_divisible(resolve_spec(P(*x.axes), rules),
+                                     x.shape, mesh)
+        return resolve_spec(x, rules)
+
+    return jax.tree.map(one, decls_or_logical,
+                        is_leaf=lambda x: isinstance(x, (ParamDecl, P)))
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(cfg, mesh: Mesh) -> P:
+    rules = make_rules(cfg, mesh)
+    return resolve_spec(P("dp", None), rules)
+
+
+def dp_size(mesh: Mesh) -> int:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+
+
+# ---------------------------------------------------------------------------
+# Sharding context — lets model code state *logical* activation constraints
+# without threading the mesh through every call.  Unset (CPU unit tests) it is
+# a no-op; the launcher installs it around tracing/lowering.
+# ---------------------------------------------------------------------------
+
+class _ShardCtx:
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+
+
+_CTX = _ShardCtx()
+
+
+class shard_ctx:
+    """Context manager installing (mesh, rules) for `constrain`/`ctx_dp_size`."""
+
+    def __init__(self, cfg, mesh: Mesh):
+        self.mesh = mesh
+        self.rules = make_rules(cfg, mesh)
+
+    def __enter__(self):
+        self._saved = (_CTX.mesh, _CTX.rules)
+        _CTX.mesh, _CTX.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._saved
+        return False
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint against the installed context (no-op if unset)."""
+    if _CTX.mesh is None:
+        return x
+    spec = resolve_spec(P(*logical_axes), _CTX.rules)
+    spec = enforce_divisible(spec, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def ctx_dp_size() -> int:
+    if _CTX.mesh is None:
+        return 1
+    return dp_size(_CTX.mesh)
+
+
+def ctx_axis_size(axis: str) -> int:
+    if _CTX.mesh is None:
+        return 1
+    sizes = dict(zip(_CTX.mesh.axis_names, _CTX.mesh.devices.shape))
+    return sizes.get(axis, 1)

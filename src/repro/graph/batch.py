@@ -1,0 +1,69 @@
+"""Batch generation (Algo. 1 lines 9-10): dedup → reindex → feature retrieve.
+
+Locality-aware sampling concentrates repeated node ids, so deduplication
+shrinks the mini-batch substantially (the paper's memory win).  Features for
+the input hop are fetched THROUGH the cache (hit/miss accounting feeds both
+throughput and the bias feedback loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cache import FeatureCache
+from repro.core.sampling import MiniBatch
+
+
+def generate_batch(mb: MiniBatch, cache: Optional[FeatureCache],
+                   graph) -> MiniBatch:
+    """Fill ``mb.features`` for the input hop (dedup already done by the
+    sampler's np.unique reindexing)."""
+    if cache is not None:
+        feats = cache.fetch(mb.input_ids)
+    else:
+        feats = graph.features[mb.input_ids]
+    return dataclasses.replace(mb, features=feats)
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def batch_device_arrays(mb: MiniBatch):
+    """Convert to jit-friendly arrays with CHAINED pow2 padding.
+
+    Invariant required by models/gnn.py: the padded dst count of hop i equals
+    the padded src count of hop i+1 (dst_ids ARE the prefix of the next hop's
+    src_ids, so one pad size per node level).  Padded neighbor rows are -1
+    (masked out); padded feature rows are zero.  The final level (seeds) is
+    left at the exact batch size, which is constant across steps."""
+    feats = mb.features
+    n_levels = len(mb.blocks) + 1
+    # level sizes: [n_src_hop0, n_dst_hop0 == n_src_hop1, ..., n_seeds]
+    sizes = [len(mb.blocks[0].src_ids)] + [len(b.dst_ids) for b in mb.blocks]
+    pads = [_pow2(s) for s in sizes]
+    pads[-1] = sizes[-1]                        # seeds: exact batch size
+    fpad = np.zeros((pads[0], feats.shape[1]), feats.dtype)
+    fpad[:sizes[0]] = feats
+    neigh_idxs = []
+    for i, blk in enumerate(mb.blocks):
+        pad_dst = pads[i + 1]
+        m = -np.ones((pad_dst, blk.neigh_idx.shape[1]), np.int32)
+        m[:blk.neigh_idx.shape[0]] = blk.neigh_idx
+        neigh_idxs.append(m)
+    return {
+        "features": fpad,
+        "neigh_idxs": neigh_idxs,
+        "labels": mb.labels.astype(np.int32),
+        "sizes": sizes,
+    }
+
+
+def batch_bytes(mb: MiniBatch) -> int:
+    """B term of Eq. (3): bytes of the generated mini-batch."""
+    total = mb.features.nbytes if mb.features is not None else 0
+    for blk in mb.blocks:
+        total += blk.neigh_idx.nbytes + blk.src_ids.nbytes + blk.dst_ids.nbytes
+    return total + mb.labels.nbytes

@@ -1,0 +1,105 @@
+"""Graph storage: CSR adjacency + node feature store (host DRAM).
+
+The host-resident graph mirrors the paper's CPU-side data: adjacency in CSR,
+features in a dense row store, labels + split masks for node classification.
+Degree ("hotness") statistics drive the static cache policy (PaGraph-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Graph:
+    indptr: np.ndarray          # (N+1,) int64
+    indices: np.ndarray         # (E,) int32 — neighbor lists, CSR
+    features: np.ndarray        # (N, F) float32
+    labels: np.ndarray          # (N,) int32
+    train_mask: np.ndarray      # (N,) bool
+    val_mask: np.ndarray
+    test_mask: np.ndarray
+    name: str = "graph"
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.indices)
+
+    @property
+    def feat_dim(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return int(self.labels.max()) + 1
+
+    def density(self) -> float:
+        n = self.num_nodes
+        return self.num_edges / max(n * (n - 1), 1)
+
+    def avg_degree(self) -> float:
+        return self.num_edges / max(self.num_nodes, 1)
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def hotness_order(self) -> np.ndarray:
+        """Node ids sorted by descending out-degree (PaGraph hotness)."""
+        return np.argsort(-self.degrees(), kind="stable").astype(np.int32)
+
+    def subgraph(self, nodes: np.ndarray) -> "Graph":
+        """Induced subgraph with LOCAL ids 0..len(nodes)-1 (partitioning)."""
+        nodes = np.asarray(nodes, dtype=np.int32)
+        remap = -np.ones(self.num_nodes, dtype=np.int32)
+        remap[nodes] = np.arange(len(nodes), dtype=np.int32)
+        indptr = [0]
+        idx_out = []
+        for v in nodes:
+            nb = remap[self.neighbors(v)]
+            nb = nb[nb >= 0]
+            idx_out.append(nb)
+            indptr.append(indptr[-1] + len(nb))
+        return Graph(
+            indptr=np.asarray(indptr, np.int64),
+            indices=(np.concatenate(idx_out) if idx_out else
+                     np.zeros(0, np.int32)).astype(np.int32),
+            features=self.features[nodes],
+            labels=self.labels[nodes],
+            train_mask=self.train_mask[nodes],
+            val_mask=self.val_mask[nodes],
+            test_mask=self.test_mask[nodes],
+            name=f"{self.name}-sub{len(nodes)}",
+        )
+
+    def memory_bytes(self) -> int:
+        return (self.indptr.nbytes + self.indices.nbytes
+                + self.features.nbytes + self.labels.nbytes)
+
+
+def from_edges(num_nodes: int, src: np.ndarray, dst: np.ndarray,
+               features: np.ndarray, labels: np.ndarray,
+               train_frac=0.66, val_frac=0.1, seed=0,
+               name="graph") -> Graph:
+    """Build CSR (out-edges src→dst) + random split masks."""
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=num_nodes)
+    indptr = np.zeros(num_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    rng = np.random.default_rng(seed)
+    r = rng.random(num_nodes)
+    train = r < train_frac
+    val = (r >= train_frac) & (r < train_frac + val_frac)
+    test = ~train & ~val
+    return Graph(indptr, dst.astype(np.int32), features.astype(np.float32),
+                 labels.astype(np.int32), train, val, test, name=name)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots A³GNN optimizes.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper with interpret/XLA fallbacks), ``ref.py`` (pure-jnp oracle).
+
+  reservoir/        vectorized weighted-reservoir top-m neighbor selection
+  gather/           device-map feature-cache row gather
+  segment_agg/      masked neighbor mean aggregation (GraphSAGE SpMM analogue)
+  flash_attention/  blockwise fused attention fwd (LM stack hot-spot)
+"""

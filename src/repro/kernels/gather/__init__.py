@@ -1,0 +1,1 @@
+from repro.kernels.gather.ops import cache_gather

@@ -1,0 +1,25 @@
+"""jit wrapper: pad n to the id-block, dispatch kernel/ref."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather.kernel import cache_gather_pallas
+from repro.kernels.gather.ref import cache_gather_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cache_gather(slots, cache, use_pallas: bool = True,
+                 interpret: bool = True):
+    """slots (n,) int32 (−1 miss) → (features (n,F), miss (n,) int32)."""
+    n = slots.shape[0]
+    np_ = -(-n // 8) * 8
+    slots_p = jnp.pad(slots.astype(jnp.int32), (0, np_ - n),
+                      constant_values=-1)
+    if use_pallas:
+        out, miss = cache_gather_pallas(slots_p, cache, interpret=interpret)
+    else:
+        out, miss = cache_gather_ref(slots_p, cache)
+    return out[:n], miss[:n]

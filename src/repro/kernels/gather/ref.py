@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the cache gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_gather_ref(slots, cache):
+    hit = slots >= 0
+    rows = cache[jnp.maximum(slots, 0)]
+    out = jnp.where(hit[:, None], rows, 0.0)
+    return out, (~hit).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.reservoir.ops import reservoir_topm

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the reservoir top-m kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -3.0e38
+
+
+def reservoir_topm_ref(weights, u, mask, m: int):
+    keys = jnp.log(jnp.maximum(u, 1e-30)) / jnp.maximum(weights, 1e-9)
+    keys = jnp.where(mask != 0, keys, NEG)
+    R, npad = keys.shape
+    iota = jnp.broadcast_to(jnp.arange(npad, dtype=jnp.int32), keys.shape)
+    idxs, kouts = [], []
+    for _ in range(m):
+        mx = jnp.max(keys, axis=1, keepdims=True)
+        is_max = (keys == mx) & (mx > NEG / 2)
+        idx = jnp.min(jnp.where(is_max, iota, npad), axis=1)
+        idxs.append(idx.astype(jnp.int32))
+        kouts.append(mx[:, 0])
+        keys = jnp.where(iota == idx[:, None], NEG, keys)
+    return jnp.stack(idxs, 1), jnp.stack(kouts, 1)

@@ -1,0 +1,1 @@
+from repro.kernels.segment_agg.ops import neighbor_mean

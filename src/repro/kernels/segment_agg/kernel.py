@@ -1,0 +1,58 @@
+"""Pallas kernel: masked neighbor-mean aggregation (GraphSAGE hot-spot).
+
+TPU adaptation of the CSR SpMM the GPU frameworks use: the sampler's
+fixed-fanout padded blocks turn aggregation into a dense masked gather-mean —
+grid (dst_blocks, feature_blocks), neighbor indices scalar-prefetched, one
+VMEM accumulator per dst row.  -1 indices are padding (masked out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _agg_kernel(idx_ref, h_ref, out_ref, *, rows_per_block: int, fanout: int):
+    base = pl.program_id(0) * rows_per_block        # idx_ref is unblocked
+    for r in range(rows_per_block):                 # static row unroll
+        acc = jnp.zeros((1, out_ref.shape[-1]), jnp.float32)
+        cnt = jnp.zeros((), jnp.float32)
+        for f in range(fanout):                     # static fanout unroll
+            idx = idx_ref[base + r, f]
+            valid = idx >= 0
+            safe = jnp.maximum(idx, 0)
+            row = pl.load(h_ref, (pl.dslice(safe, 1), slice(None)))
+            acc = acc + jnp.where(valid, row.astype(jnp.float32), 0.0)
+            cnt = cnt + jnp.where(valid, 1.0, 0.0)
+        mean = acc / jnp.maximum(cnt, 1.0)
+        pl.store(out_ref, (pl.dslice(r, 1), slice(None)),
+                 mean.astype(out_ref.dtype))
+
+
+def neighbor_mean_pallas(neigh_idx: jnp.ndarray, h_src: jnp.ndarray,
+                         rows_per_block: int = 8, block_f: int = 256,
+                         interpret: bool = True):
+    """neigh_idx (Nd, fanout) int32 (−1 pad); h_src (Ns, F) → (Nd, F)."""
+    Nd, fanout = neigh_idx.shape
+    Ns, F = h_src.shape
+    block_f = min(block_f, F)
+    assert Nd % rows_per_block == 0 and F % block_f == 0
+    grid = (Nd // rows_per_block, F // block_f)
+    kernel = functools.partial(_agg_kernel, rows_per_block=rows_per_block,
+                               fanout=fanout)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((Ns, block_f), lambda i, f, idx: (0, f))],
+        out_specs=pl.BlockSpec((rows_per_block, block_f),
+                               lambda i, f, idx: (i, f)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Nd, F), h_src.dtype),
+        interpret=interpret,
+    )(neigh_idx, h_src)

@@ -1,0 +1,24 @@
+"""jit wrapper: pad dst rows, dispatch kernel/ref."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg.kernel import neighbor_mean_pallas
+from repro.kernels.segment_agg.ref import neighbor_mean_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def neighbor_mean(neigh_idx, h_src, use_pallas: bool = True,
+                  interpret: bool = True):
+    Nd, fanout = neigh_idx.shape
+    ndp = -(-Nd // 8) * 8
+    idx_p = jnp.pad(neigh_idx.astype(jnp.int32), ((0, ndp - Nd), (0, 0)),
+                    constant_values=-1)
+    if use_pallas:
+        out = neighbor_mean_pallas(idx_p, h_src)
+    else:
+        out = neighbor_mean_ref(idx_p, h_src)
+    return out[:Nd]

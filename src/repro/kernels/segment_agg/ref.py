@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: masked neighbor mean (matches models/gnn._mean_agg)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbor_mean_ref(neigh_idx, h_src):
+    mask = neigh_idx >= 0
+    nb = h_src[jnp.maximum(neigh_idx, 0)]
+    nb = nb * mask[..., None].astype(h_src.dtype)
+    cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(h_src.dtype)
+    return nb.sum(1) / cnt

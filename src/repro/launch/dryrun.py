@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run.
+
+For every (architecture × input shape × mesh) cell:
+
+1. FULL-DEPTH compile (scan-over-layers): proves the sharding config is
+   coherent at production scale; records ``memory_analysis()`` (per-device
+   fit proof) and compile wall-time.
+2. COST PROBES: two reduced-depth configs compiled with every scan fully
+   unrolled.  XLA's ``cost_analysis()`` counts a while-loop body once,
+   ignoring trip count (verified empirically), so scanned full-depth counts
+   are wrong; per-layer cost is exactly linear in depth for our homogeneous
+   stacks, so two unrolled probes give exact full-depth
+   FLOPs / bytes / collective-traffic via linear extrapolation.
+
+Results are cached as JSON under ``benchmarks/artifacts/dryrun/`` so the
+sweep is resumable; ``benchmarks/roofline.py`` consumes them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, SHAPES_BY_NAME, applicable_shapes
+from repro.models.api import build
+from repro.models.params import abstract_params, param_count, param_bytes
+from repro.models.unroll import force_unroll
+from repro.distributed.sharding import (physical_specs, shardings_of, make_rules,
+                                        resolve_spec, shard_ctx, enforce_divisible)
+from repro.launch.mesh import make_production_mesh, HW
+from repro.train.trainer import make_train_step
+from repro.train.optimizer import get_optimizer
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective traffic from post-SPMD HLO.
+
+    Volume model (ring algorithms, (n-1)/n ≈ 1):
+      all-gather / all-to-all / collective-permute : result bytes
+      all-reduce / reduce-scatter                  : 2 × result bytes
+    ``*-done`` ops are skipped (their ``*-start`` twin is counted).
+    """
+    per_op = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, op = m.groups()
+        if m.group(0).rstrip().endswith("-done("):
+            continue
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        if dims.strip():
+            for d in dims.split(","):
+                nbytes *= int(d)
+        factor = 2.0 if op in ("all-reduce", "reduce-scatter") else 1.0
+        per_op[op]["count"] += 1
+        per_op[op]["bytes"] += nbytes * factor
+    total = sum(v["bytes"] for v in per_op.values())
+    return dict(per_op), total
+
+
+# ---------------------------------------------------------------------------
+# Depth scaling
+# ---------------------------------------------------------------------------
+
+def depth_probe_cfgs(cfg):
+    """(cfg1, u1), (cfg2, u2), u_full — linear depth units per family."""
+    if cfg.family == "hybrid":
+        every, rem = cfg.shared_attn_every, cfg.num_layers % cfg.shared_attn_every
+        l1, l2 = every + rem, 2 * every + rem
+        return ((cfg.replace(num_layers=l1), 1),
+                (cfg.replace(num_layers=l2), 2),
+                cfg.num_layers // every)
+    if cfg.family == "encdec":
+        return ((cfg.replace(num_layers=2, encoder_layers=2), 2),
+                (cfg.replace(num_layers=4, encoder_layers=4), 4),
+                cfg.num_layers)
+    return ((cfg.replace(num_layers=2), 2),
+            (cfg.replace(num_layers=4), 4),
+            cfg.num_layers)
+
+
+def _extrapolate(c1, c2, u1, u2, uf):
+    b = (c2 - c1) / max(u2 - u1, 1)
+    return max(c1 + b * (uf - u1), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one step function
+# ---------------------------------------------------------------------------
+
+def _lower_cell(cfg, shape, mesh):
+    """Returns (lowered, kind).  Must run inside shard_ctx."""
+    model = build(cfg)
+    rules = make_rules(cfg, mesh)
+    spec = model.input_specs(shape)
+    batch = spec["batch"]
+    batch_sh = jax.tree.map(
+        lambda s, b: NamedSharding(
+            mesh, enforce_divisible(resolve_spec(s, rules), b.shape, mesh)),
+        spec["batch_specs"], batch,
+        is_leaf=lambda x: isinstance(x, P))
+    pspecs = physical_specs(model.decls, cfg, mesh)
+    param_sh = shardings_of(pspecs, mesh)
+    aparams = abstract_params(model.decls,
+                              dtype_override=jnp.dtype(cfg.param_dtype))
+    repl = NamedSharding(mesh, P())
+
+    if spec["kind"] == "train":
+        opt = get_optimizer(cfg)
+        step, _ = make_train_step(model, cfg, opt,
+                                  grad_accum=getattr(cfg, "grad_accum", 1))
+        odecls = opt.state_decls(model.decls)
+        ostate = abstract_params(odecls)
+        opt_sh = shardings_of(physical_specs(odecls, cfg, mesh), mesh)
+        metric_sh = jax.tree.map(lambda _: repl,
+                                 {"loss": 0, "grad_norm": 0, "aux": 0})
+        jf = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, metric_sh),
+                     donate_argnums=(0, 1))
+        return jf.lower(aparams, ostate, batch), spec
+    logit_spec = enforce_divisible(
+        resolve_spec(P("dp", None), rules),
+        (shape.global_batch, cfg.vocab_size), mesh)
+    if spec["kind"] == "prefill":
+        cdecls = model.cache_decls(shape.global_batch, shape.seq_len)
+        cache_sh = shardings_of(physical_specs(cdecls, cfg, mesh), mesh)
+        logit_sh = NamedSharding(mesh, logit_spec)
+        jf = jax.jit(model.prefill, in_shardings=(param_sh, batch_sh),
+                     out_shardings=(logit_sh, cache_sh))
+        return jf.lower(aparams, batch), spec
+    # decode
+    cdecls = spec["cache_decls"]
+    cache_sh = shardings_of(physical_specs(cdecls, cfg, mesh), mesh)
+    logit_sh = NamedSharding(mesh, logit_spec)
+    jf = jax.jit(model.decode, in_shardings=(param_sh, cache_sh, batch_sh),
+                 out_shardings=(logit_sh, cache_sh), donate_argnums=(1,))
+    return jf.lower(aparams, spec["caches"], batch), spec
+
+
+def _probe_costs(cfg, shape, mesh):
+    """Reduced-depth fully-unrolled compile → exact per-device cost fields."""
+    with shard_ctx(cfg, mesh), force_unroll(True):
+        lowered, _ = _lower_cell(cfg, shape, mesh)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    per_op, coll_total = parse_collectives(compiled.as_text())
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "coll_total": float(coll_total),
+    }
+    for op, v in per_op.items():
+        out[f"coll_{op}"] = v["bytes"]
+        out[f"collcnt_{op}"] = v["count"]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None, tag: str = ""):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "tag": tag, "skipped": True,
+                "reason": "long_500k needs sub-quadratic attention"}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(mesh.devices.shape))
+    model = build(cfg)
+
+    # ---- full-depth compile: sharding proof + memory analysis ----
+    t0 = time.time()
+    with shard_ctx(cfg, mesh):
+        lowered, spec = _lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca_raw = compiled.cost_analysis() or {}
+
+    # ---- cost probes: reduced depth, fully unrolled ----
+    (cfg1, u1), (cfg2, u2), uf = depth_probe_cfgs(cfg)
+    t0 = time.time()
+    p1 = _probe_costs(cfg1, shape, mesh)
+    p2 = _probe_costs(cfg2, shape, mesh)
+    t_probe = time.time() - t0
+    keys = sorted(set(p1) | set(p2))
+    cost = {k: _extrapolate(p1.get(k, 0.0), p2.get(k, 0.0), u1, u2, uf)
+            for k in keys}
+
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "kind": spec["kind"], "skipped": False,
+        "n_devices": n_dev,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "t_probe_s": round(t_probe, 2),
+        "params_total": param_count(model.decls),
+        "params_active": cfg.active_param_count(),
+        "param_bytes_dtype": jnp.dtype(cfg.param_dtype).itemsize,
+        "tokens_per_step": shape.global_batch * (
+            shape.seq_len if spec["kind"] in ("train", "prefill") else 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": (ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_per_device": cost.get("bytes", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+            "collective_bytes_per_device": cost.get("coll_total", 0.0),
+            "per_op": {k[5:]: v for k, v in cost.items()
+                       if k.startswith("coll_") and not k.startswith("collcnt")},
+            "raw_full_flops_scanned": float(ca_raw.get("flops", 0.0)),
+            "probe_depths": [u1, u2], "full_depth_units": uf,
+        },
+        "config": {
+            "remat": cfg.remat, "attn_chunk": cfg.attn_chunk,
+            "loss_chunk": cfg.loss_chunk, "param_dtype": cfg.param_dtype,
+            "optimizer": cfg.optimizer, "kv_shard": cfg.kv_shard,
+            **(overrides or {}),
+        },
+    }
+    return res
+
+
+def cell_path(arch, shape, mesh_kind, tag=""):
+    sfx = f"__{tag}" if tag else ""
+    return ART_DIR / mesh_kind / f"{arch}__{shape}{sfx}.json"
+
+
+def parse_overrides(pairs):
+    overrides = {}
+    for kv in pairs:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            overrides[k] = v == "True"
+            continue
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+    return overrides
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override k=v (int/float/str/bool)")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.set)
+    lm_archs = [a for a in list_archs() if not a.startswith("graphsage")]
+    archs = args.arch or (lm_archs if args.all else [])
+    shapes = args.shape or list(SHAPES_BY_NAME)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not archs:
+        ap.error("pass --arch or --all")
+
+    done, failed = 0, 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                out = cell_path(arch, shape, mesh_kind, args.tag)
+                if out.exists() and not args.force:
+                    print(f"[skip-cached] {mesh_kind}/{arch}/{shape}")
+                    continue
+                print(f"[run] {mesh_kind}/{arch}/{shape} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_kind,
+                                   overrides or None, args.tag)
+                except Exception as e:  # noqa: BLE001 — sweep must continue
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "tag": args.tag,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failed += 1
+                    print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+                out.parent.mkdir(parents=True, exist_ok=True)
+                out.write_text(json.dumps(res, indent=1))
+                if "error" not in res:
+                    done += 1
+                    if res.get("skipped"):
+                        print("  skipped:", res["reason"], flush=True)
+                    else:
+                        c, m = res["cost"], res["memory"]
+                        print(f"  ok: compile={res['t_compile_s']}s "
+                              f"probe={res['t_probe_s']}s "
+                              f"flops/dev={c['flops_per_device']:.3e} "
+                              f"peak={m['peak_device_bytes']/2**30:.2f}GiB "
+                              f"coll={c['collective_bytes_per_device']/2**20:.1f}MiB",
+                              flush=True)
+    print(f"done={done} failed={failed}")
+    return 0 if failed == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

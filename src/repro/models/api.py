@@ -1,0 +1,236 @@
+"""Unified model API.
+
+``build(cfg)`` returns a :class:`Model` whose members are pure functions
+(params first) suitable for jit/pjit:
+
+  * ``decls``                      parameter declarations (pytree of ParamDecl)
+  * ``loss_fn(params, batch)``     → (loss, metrics)   [train shapes]
+  * ``prefill(params, batch)``     → (logits, caches)  [prefill shapes]
+  * ``decode(params, caches, batch)`` → (logits, caches) [decode shapes]
+  * ``cache_decls(batch, len)``    abstract decode-cache declarations
+  * ``input_specs(shape)``         ShapeDtypeStruct stand-ins for every input
+                                   (+ logical PartitionSpecs) — the dry-run's
+                                   no-allocation entry point
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import ssm as SSM
+from repro.models import hybrid as HY
+from repro.models import encdec as ED
+from repro.models.params import ParamDecl, decl, abstract_params
+from repro.distributed.sharding import constrain
+
+VISION_PREFIX = 1024  # stubbed patch-embedding prefix length (vlm prefill/train)
+
+
+# ---------------------------------------------------------------------------
+# Pure-SSM LM (Mamba2 stack)
+# ---------------------------------------------------------------------------
+
+def _ssm_decls(cfg):
+    return {
+        "embed": L.decls_embedding(cfg),
+        "layers": T.stack_decls({"ln": L.decls_rmsnorm(cfg.d_model),
+                                 "block": SSM.decls_mamba2(cfg)}, cfg.num_layers),
+        "ln_f": L.decls_rmsnorm(cfg.d_model),
+    }
+
+
+def _ssm_forward(params, batch, cfg):
+    h = L.embed(params["embed"], batch["tokens"], cfg, T._cdt(cfg))
+    h = constrain(h, "dp", None, None)
+
+    def body(h, lp):
+        h = h + SSM.mamba2_block(lp["block"],
+                                 L.rmsnorm(lp["ln"], h, cfg.norm_eps), cfg)
+        return constrain(h, "dp", None, None), None
+
+    body = T._remat(body, cfg)
+    h, _ = uscan(body, h, params["layers"])
+    return L.rmsnorm(params["ln_f"], h, cfg.norm_eps), jnp.float32(0)
+
+
+def _ssm_loss(params, batch, cfg):
+    h, aux = _ssm_forward(params, batch, cfg)
+    loss = L.lm_loss(params["embed"], h, batch["targets"], cfg, batch.get("mask"))
+    return loss, {"loss": loss, "aux": aux}
+
+
+def _ssm_cache_decls(cfg, batch, cache_len):
+    d_inner, nheads, N, conv_dim = SSM.ssm_dims(cfg)
+    return {
+        "ssm": ParamDecl((cfg.num_layers, batch, nheads, cfg.ssm_head_dim, N),
+                         jnp.float32, (None, "dp", "tp", None, None), "zeros"),
+        "conv": ParamDecl((cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_dim),
+                          T._cdt(cfg), (None, "dp", None, "tp"), "zeros"),
+    }
+
+
+def _ssm_prefill(params, batch, cfg):
+    """Prompt pass producing final SSM/conv states per layer."""
+    h = L.embed(params["embed"], batch["tokens"], cfg, T._cdt(cfg))
+    h = constrain(h, "dp", None, None)
+    B, Ssz, _ = h.shape
+    d_inner, nheads, N, conv_dim = SSM.ssm_dims(cfg)
+
+    def body(h, lp):
+        hn = L.rmsnorm(lp["ln"], h, cfg.norm_eps)
+        p = lp["block"]
+        zxbcdt = jnp.einsum("bsd,de->bse", hn, p["in_proj"].astype(h.dtype))
+        z, xbc, dt = SSM._split_proj(cfg, zxbcdt)
+        conv_tail = xbc[:, -(cfg.ssm_conv_width - 1):, :]
+        xbc = SSM._causal_conv(xbc, p["conv_w"].astype(h.dtype),
+                               p["conv_b"].astype(h.dtype))
+        xin = xbc[..., :d_inner].reshape(B, Ssz, nheads, cfg.ssm_head_dim)
+        Bm = xbc[..., d_inner:d_inner + N]
+        Cm = xbc[..., d_inner + N:]
+        dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, fstate = SSM.ssd_chunked(xin, dtv, A, Bm, Cm, min(cfg.ssm_chunk, Ssz))
+        y = y + xin * p["D"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(B, Ssz, d_inner) * jax.nn.silu(z)
+        y = L.rmsnorm(p["norm"], y, cfg.norm_eps)
+        h = h + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(h.dtype))
+        return constrain(h, "dp", None, None), (fstate, conv_tail)
+
+    h, (fstates, tails) = uscan(body, h, params["layers"])
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], W).astype(jnp.float32)
+    return logits, {"ssm": fstates, "conv": tails}
+
+
+def _ssm_decode(params, caches, batch, cfg):
+    h = L.embed(params["embed"], batch["token"][:, None], cfg, T._cdt(cfg))
+
+    def body(h, xs):
+        lp, sc, cc = xs
+        hn = L.rmsnorm(lp["ln"], h, cfg.norm_eps)
+        y, nc = SSM.mamba2_decode(lp["block"], hn, cfg, {"ssm": sc, "conv": cc})
+        return h + y, (nc["ssm"], nc["conv"])
+
+    h, (ns, nc) = uscan(body, h, (params["layers"], caches["ssm"],
+                                         caches["conv"]))
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], W).astype(jnp.float32)
+    return logits, {"ssm": ns, "conv": nc}
+
+
+# ---------------------------------------------------------------------------
+# Model wrapper
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    decls: Any
+    loss_fn: Callable
+    prefill: Callable
+    decode: Callable
+    cache_decls_fn: Callable            # (batch, cache_len) -> decls
+
+    def cache_decls(self, batch: int, cache_len: int):
+        return self.cache_decls_fn(batch, cache_len)
+
+    # -- dry-run inputs ------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins + logical pspecs for one shape cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        cdt = jnp.dtype(cfg.compute_dtype)
+
+        if shape.kind == "train":
+            batch = {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+            specs = {"tokens": P("dp", None), "targets": P("dp", None)}
+            if cfg.family == "encdec":
+                batch["audio_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), cdt)
+                specs["audio_embeds"] = P("dp", None, None)
+            if cfg.family == "vlm":
+                vp = min(VISION_PREFIX, S // 4)
+                batch["vision_embeds"] = sds((B, vp, cfg.d_model), cdt)
+                specs["vision_embeds"] = P("dp", None, None)
+                batch["positions"] = sds((3, B, S), i32)
+                specs["positions"] = P(None, "dp", None)
+            return {"kind": "train", "batch": batch, "batch_specs": specs}
+
+        if shape.kind == "prefill":
+            batch = {"tokens": sds((B, S), i32)}
+            specs = {"tokens": P("dp", None)}
+            if cfg.family == "encdec":
+                batch["audio_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), cdt)
+                specs["audio_embeds"] = P("dp", None, None)
+            if cfg.family == "vlm":
+                vp = min(VISION_PREFIX, S // 4)
+                batch["vision_embeds"] = sds((B, vp, cfg.d_model), cdt)
+                specs["vision_embeds"] = P("dp", None, None)
+                batch["positions"] = sds((3, B, S), i32)
+                specs["positions"] = P(None, "dp", None)
+            return {"kind": "prefill", "batch": batch, "batch_specs": specs}
+
+        # decode: one new token against a seq_len cache
+        batch = {"token": sds((B,), i32), "pos": sds((B,), i32)}
+        specs = {"token": P("dp"), "pos": P("dp")}
+        if cfg.family == "vlm":
+            batch["positions"] = sds((3, B, 1), i32)
+            specs["positions"] = P(None, "dp", None)
+        cdecls = self.cache_decls(B, S)
+        caches = abstract_params(cdecls)
+        return {"kind": "decode", "batch": batch, "batch_specs": specs,
+                "caches": caches, "cache_decls": cdecls}
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            decls=T.decls_lm(cfg),
+            loss_fn=lambda p, b: T.loss_fn(p, b, cfg),
+            prefill=lambda p, b: T.prefill(p, b, cfg),
+            decode=lambda p, c, b: T.decode_step(p, c, b, cfg),
+            cache_decls_fn=lambda batch, n: T.cache_decls(cfg, batch, n),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            decls=_ssm_decls(cfg),
+            loss_fn=lambda p, b: _ssm_loss(p, b, cfg),
+            prefill=lambda p, b: _ssm_prefill(p, b, cfg),
+            decode=lambda p, c, b: _ssm_decode(p, c, b, cfg),
+            cache_decls_fn=lambda batch, n: _ssm_cache_decls(cfg, batch, n),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            decls=HY.decls_hybrid(cfg),
+            loss_fn=lambda p, b: HY.loss_fn(p, b, cfg),
+            prefill=lambda p, b: HY.prefill(p, b, cfg),
+            decode=lambda p, c, b: HY.decode_step(p, c, b, cfg),
+            cache_decls_fn=lambda batch, n: HY.cache_decls(cfg, batch, n),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            decls=ED.decls_encdec(cfg),
+            loss_fn=lambda p, b: ED.loss_fn(p, b, cfg),
+            prefill=lambda p, b: ED.prefill(p, b, cfg),
+            decode=lambda p, c, b: ED.decode_step(p, c, b, cfg),
+            cache_decls_fn=lambda batch, n: ED.cache_decls(cfg, batch, n),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,164 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, encoder_seq, D).  Everything
+downstream — bidirectional encoder, causal decoder with cross attention,
+learned positional embeddings, pre-LN layernorm + GELU MLP — is real.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import decl, ParamDecl
+from repro.models.transformer import stack_decls, _remat, _cdt
+from repro.distributed.sharding import constrain
+
+
+def decls_encdec(cfg):
+    enc_layer = {
+        "ln1": L.decls_layernorm(cfg.d_model),
+        "attn": L.decls_attention(cfg),
+        "ln2": L.decls_layernorm(cfg.d_model),
+        "mlp": L.decls_mlp(cfg),
+    }
+    dec_layer = {
+        "ln1": L.decls_layernorm(cfg.d_model),
+        "attn": L.decls_attention(cfg),
+        "ln_x": L.decls_layernorm(cfg.d_model),
+        "xattn": L.decls_attention(cfg),
+        "ln2": L.decls_layernorm(cfg.d_model),
+        "mlp": L.decls_mlp(cfg),
+    }
+    return {
+        "embed": L.decls_embedding(cfg),
+        "pos_enc": decl((cfg.encoder_seq, cfg.d_model), (None, "fsdp"),
+                        init="normal", scale=0.02),
+        "pos_dec": decl((cfg.max_seq, cfg.d_model), (None, "fsdp"),
+                        init="normal", scale=0.02),
+        "encoder": stack_decls(enc_layer, cfg.encoder_layers),
+        "decoder": stack_decls(dec_layer, cfg.num_layers),
+        "ln_enc": L.decls_layernorm(cfg.d_model),
+        "ln_f": L.decls_layernorm(cfg.d_model),
+    }
+
+
+def encode(params, audio_embeds, cfg):
+    """audio_embeds (B, S_enc, D) — precomputed frontend output (stub)."""
+    h = audio_embeds.astype(_cdt(cfg))
+    h = h + params["pos_enc"].astype(h.dtype)[None, :h.shape[1]]
+    h = constrain(h, "dp", None, None)
+
+    def body(h, lp):
+        a = L.attention(lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+                        cfg, causal=False)
+        h = h + a
+        m = L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps), cfg)
+        return constrain(h + m, "dp", None, None), None
+
+    body = _remat(body, cfg)
+    h, _ = uscan(body, h, params["encoder"])
+    return L.layernorm(params["ln_enc"], h, cfg.norm_eps)
+
+
+def _decoder_fwd(params, tokens, enc_out, cfg):
+    h = L.embed(params["embed"], tokens, cfg, _cdt(cfg))
+    S = tokens.shape[1]
+    h = h + params["pos_dec"].astype(h.dtype)[None, :S]
+    h = constrain(h, "dp", None, None)
+
+    def body(h, lp):
+        a = L.attention(lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps),
+                        cfg, causal=True)
+        h = h + a
+        kv = L.cross_kv(lp["xattn"], enc_out, cfg)
+        x = L.attention_cross(lp["xattn"],
+                              L.layernorm(lp["ln_x"], h, cfg.norm_eps), kv, cfg)
+        h = h + x
+        m = L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps), cfg)
+        return constrain(h + m, "dp", None, None), None
+
+    body = _remat(body, cfg)
+    h, _ = uscan(body, h, params["decoder"])
+    return L.layernorm(params["ln_f"], h, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    h = _decoder_fwd(params, batch["tokens"], enc_out, cfg)
+    loss = L.lm_loss(params["embed"], h, batch["targets"], cfg, batch.get("mask"))
+    return loss, {"loss": loss, "aux": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn KV caches + precomputed cross-attn KV per layer
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg, batch: int, cache_len: int):
+    Hkv, Dh, Lyr = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    cdt = _cdt(cfg)
+    self_axes = (None, "dp", "kvseq", "kvheads", None)
+    cross_axes = (None, "dp", None, "kvheads", None)
+    return {
+        "k": ParamDecl((Lyr, batch, cache_len, Hkv, Dh), cdt, self_axes, "zeros"),
+        "v": ParamDecl((Lyr, batch, cache_len, Hkv, Dh), cdt, self_axes, "zeros"),
+        "xk": ParamDecl((Lyr, batch, cfg.encoder_seq, Hkv, Dh), cdt, cross_axes, "zeros"),
+        "xv": ParamDecl((Lyr, batch, cfg.encoder_seq, Hkv, Dh), cdt, cross_axes, "zeros"),
+    }
+
+
+def prefill(params, batch, cfg):
+    """Encode audio + run the decoder prompt, building all caches."""
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = L.embed(params["embed"], tokens, cfg, _cdt(cfg))
+    h = h + params["pos_dec"].astype(h.dtype)[None, :S]
+    h = constrain(h, "dp", None, None)
+
+    def body(h, lp):
+        a, (k, v) = L.attention_prefill(
+            lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cfg, causal=True)
+        h = h + a
+        xk, xv = L.cross_kv(lp["xattn"], enc_out, cfg)
+        x = L.attention_cross(lp["xattn"],
+                              L.layernorm(lp["ln_x"], h, cfg.norm_eps), (xk, xv), cfg)
+        h = h + x
+        m = L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps), cfg)
+        return constrain(h + m, "dp", None, None), (k, v, xk, xv)
+
+    h, (ks, vs, xks, xvs) = uscan(body, h, params["decoder"])
+    h = L.layernorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], W).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+
+def decode_step(params, caches, batch, cfg):
+    B = batch["token"].shape[0]
+    pos = batch["pos"]
+    h = L.embed(params["embed"], batch["token"][:, None], cfg, _cdt(cfg))
+    pe = params["pos_dec"].astype(h.dtype)[jnp.broadcast_to(pos, (B,))]
+    h = h + pe[:, None, :]
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        a, ck, cv = L.attention_decode(
+            lp["attn"], L.layernorm(lp["ln1"], h, cfg.norm_eps), cfg, ck, cv, pos)
+        h = h + a
+        x = L.attention_cross(lp["xattn"],
+                              L.layernorm(lp["ln_x"], h, cfg.norm_eps), (xk, xv), cfg)
+        h = h + x
+        m = L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps), cfg)
+        return h + m, (ck, cv)
+
+    h, (ks, vs) = uscan(body, h, (params["decoder"], caches["k"],
+                                         caches["v"], caches["xk"], caches["xv"]))
+    h = L.layernorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], W).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "xk": caches["xk"], "xv": caches["xv"]}

@@ -1,0 +1,140 @@
+"""GNN models over sampled blocks: GraphSAGE (mean), GCN, GAT.
+
+Blocks use fixed-fanout padded neighbor matrices (core/sampling.py) so every
+hop is a dense masked gather + matmul — the TPU-native formulation of the
+CSR SpMM the GPU frameworks use (kernels/segment_agg provides the Pallas
+path).  Variable node counts are bucketed to powers of two (graph/batch.py)
+so jit recompiles only a handful of times.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import decl
+
+_KERNEL_AGG = {"enabled": False}  # flipped by kernels/segment_agg/ops.py users
+
+
+def layer_dims(cfg) -> List[Tuple[int, int]]:
+    dims = [cfg.feat_dim] + [cfg.hidden] * (cfg.num_layers - 1) + [cfg.num_classes]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def decls_gnn(cfg):
+    layers = []
+    for (din, dout) in layer_dims(cfg):
+        if cfg.model == "graphsage":
+            layers.append({"w_self": decl((din, dout), (None, None)),
+                           "w_neigh": decl((din, dout), (None, None)),
+                           "b": decl((dout,), (None,), init="zeros")})
+        elif cfg.model == "gcn":
+            layers.append({"w": decl((din, dout), (None, None)),
+                           "b": decl((dout,), (None,), init="zeros")})
+        elif cfg.model == "gat":
+            layers.append({"w": decl((din, dout), (None, None)),
+                           "a_src": decl((dout,), (None,), scale=0.1, init="normal"),
+                           "a_dst": decl((dout,), (None,), scale=0.1, init="normal"),
+                           "b": decl((dout,), (None,), init="zeros")})
+        else:
+            raise ValueError(cfg.model)
+    return {"layers": layers}
+
+
+def _gather_neighbors(h_src, neigh_idx):
+    """h_src (Ns,D), neigh_idx (Nd,F) with -1 pad → (nb (Nd,F,D), mask)."""
+    mask = (neigh_idx >= 0)
+    idx = jnp.maximum(neigh_idx, 0)
+    nb = h_src[idx]
+    return nb * mask[..., None].astype(h_src.dtype), mask
+
+
+def _mean_agg(h_src, neigh_idx):
+    nb, mask = _gather_neighbors(h_src, neigh_idx)
+    cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(h_src.dtype)
+    return nb.sum(1) / cnt
+
+
+def sage_layer(p, h_src, neigh_idx, *, act=True):
+    n_dst = neigh_idx.shape[0]
+    h_dst = h_src[:n_dst]
+    agg = _mean_agg(h_src, neigh_idx)
+    out = h_dst @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
+    return jax.nn.relu(out) if act else out
+
+
+def gcn_layer(p, h_src, neigh_idx, *, act=True):
+    n_dst = neigh_idx.shape[0]
+    h_dst = h_src[:n_dst]
+    # sampled-mean approximation of sym-normalized aggregation incl. self-loop
+    mask = (neigh_idx >= 0)
+    cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(h_src.dtype)
+    agg = (_mean_agg(h_src, neigh_idx) * cnt + h_dst) / (cnt + 1.0)
+    out = agg @ p["w"] + p["b"]
+    return jax.nn.relu(out) if act else out
+
+
+def gat_layer(p, h_src, neigh_idx, *, act=True):
+    n_dst = neigh_idx.shape[0]
+    z_src = h_src @ p["w"]                               # (Ns,D')
+    z_dst = z_src[:n_dst]
+    nb, mask = _gather_neighbors(z_src, neigh_idx)       # (Nd,F,D')
+    e = jax.nn.leaky_relu(nb @ p["a_src"] + (z_dst @ p["a_dst"])[:, None],
+                          negative_slope=0.2)
+    e = jnp.where(mask, e, -1e30)
+    # include self edge in the softmax
+    e_self = jax.nn.leaky_relu(z_dst @ (p["a_src"] + p["a_dst"]))[:, None]
+    alla = jax.nn.softmax(jnp.concatenate([e, e_self], axis=1), axis=1)
+    agg = jnp.einsum("nf,nfd->nd", alla[:, :-1], nb) + alla[:, -1:] * z_dst
+    out = agg + p["b"]
+    return jax.nn.elu(out) if act else out
+
+
+_LAYER_FNS = {"graphsage": sage_layer, "gcn": gcn_layer, "gat": gat_layer}
+
+
+def gnn_forward(params, features, neigh_idxs: List[jnp.ndarray], cfg):
+    """features (pad_src0, F); neigh_idxs[i] (pad_dst_i, fanout_i) with the
+    chained-padding invariant pad_dst_i == pad_src_{i+1}."""
+    fn = _LAYER_FNS[cfg.model]
+    h = features.astype(jnp.dtype(cfg.compute_dtype))
+    n = len(params["layers"])
+    for i, (p, idx) in enumerate(zip(params["layers"], neigh_idxs)):
+        h = fn(p, h, idx, act=(i < n - 1))
+    return h                                              # (pad_seeds, classes)
+
+
+def gnn_loss(params, features, neigh_idxs, labels, cfg):
+    logits = gnn_forward(params, features, neigh_idxs, cfg)
+    logits = logits[:labels.shape[0]].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def make_train_step(cfg, opt):
+    """jit-able (params, opt_state, features, neigh_idxs, labels) step."""
+
+    @jax.jit
+    def step(params, opt_state, features, neigh_idxs, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, features, neigh_idxs, labels, cfg),
+            has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params, cfg.lr)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        return params, opt_state, loss, acc
+
+    return step
+
+
+def make_eval_fn(cfg):
+    @jax.jit
+    def ev(params, features, neigh_idxs, labels):
+        logits = gnn_forward(params, features, neigh_idxs, cfg)
+        logits = logits[:labels.shape[0]]
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ev

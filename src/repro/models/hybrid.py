@@ -1,0 +1,218 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single weight-SHARED attention
+block applied after every ``shared_attn_every`` SSM layers.
+
+Structure note (vs. the released Zamba2): we apply the shared block to the
+running hidden state with pre-RMSNorm (the release concatenates the original
+embedding and projects down; documented simplification in DESIGN.md).  The
+layer stack is executed as python-level groups of ``every`` scanned Mamba
+layers followed by one shared-attention application — this keeps HLO compact
+(one scan body per group) while giving *exact* FLOP accounting (no lax.cond
+double-counting in cost_analysis) and a statically-indexed KV cache per
+application.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.params import ParamDecl, decl
+from repro.models.transformer import stack_decls, _remat, _cdt
+from repro.distributed.sharding import constrain
+
+
+def n_attn_blocks(cfg) -> int:
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def _groups(cfg):
+    """Static (start, size, has_attn) python-level grouping of the stack."""
+    every, n = cfg.shared_attn_every, cfg.num_layers
+    out = []
+    start = 0
+    while start < n:
+        size = min(every, n - start)
+        out.append((start, size, size == every))
+        start += size
+    return out
+
+
+def decls_hybrid(cfg):
+    return {
+        "embed": L.decls_embedding(cfg),
+        "mamba": stack_decls({"ln": L.decls_rmsnorm(cfg.d_model),
+                              "block": S.decls_mamba2(cfg)}, cfg.num_layers),
+        "shared": {
+            "ln1": L.decls_rmsnorm(cfg.d_model),
+            "attn": L.decls_attention(cfg),
+            "ln2": L.decls_rmsnorm(cfg.d_model),
+            "mlp": L.decls_mlp(cfg),
+        },
+        "ln_f": L.decls_rmsnorm(cfg.d_model),
+    }
+
+
+def _slice_group(stacked, start, size):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=0),
+                        stacked)
+
+
+def _shared_fwd(sp, h, cfg, positions):
+    a = L.attention(sp["attn"], L.rmsnorm(sp["ln1"], h, cfg.norm_eps), cfg,
+                    positions)
+    h = h + a
+    m = L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+    return constrain(h + m, "dp", None, None)
+
+
+def forward(params, batch, cfg):
+    h = L.embed(params["embed"], batch["tokens"], cfg, _cdt(cfg))
+    h = constrain(h, "dp", None, None)
+    B, Ssz, D = h.shape
+    positions = jnp.arange(Ssz, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+    def body(h, lp):
+        h = h + S.mamba2_block(lp["block"], L.rmsnorm(lp["ln"], h, cfg.norm_eps), cfg)
+        return constrain(h, "dp", None, None), None
+
+    body = _remat(body, cfg)
+    for (start, size, has_attn) in _groups(cfg):
+        gp = _slice_group(params["mamba"], start, size)
+        h, _ = uscan(body, h, gp)
+        if has_attn:
+            h = _shared_fwd(params["shared"], h, cfg, positions)
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h, jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg):
+    h, aux = forward(params, batch, cfg)
+    loss = L.lm_loss(params["embed"], h, batch["targets"], cfg, batch.get("mask"))
+    return loss, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg, batch: int, cache_len: int):
+    d_inner, nheads, N, conv_dim = S.ssm_dims(cfg)
+    n_attn = n_attn_blocks(cfg)
+    Lyr = cfg.num_layers
+    cdt = _cdt(cfg)
+    return {
+        "ssm": ParamDecl((Lyr, batch, nheads, cfg.ssm_head_dim, N),
+                         jnp.float32, (None, "dp", "tp", None, None), "zeros"),
+        "conv": ParamDecl((Lyr, batch, cfg.ssm_conv_width - 1, conv_dim),
+                          cdt, (None, "dp", None, "tp"), "zeros"),
+        "k": ParamDecl((n_attn, batch, cache_len, cfg.num_kv_heads, cfg.head_dim),
+                       cdt, (None, "dp", "kvseq", "kvheads", None), "zeros"),
+        "v": ParamDecl((n_attn, batch, cache_len, cfg.num_kv_heads, cfg.head_dim),
+                       cdt, (None, "dp", "kvseq", "kvheads", None), "zeros"),
+    }
+
+
+def prefill(params, batch, cfg):
+    """Prompt pass filling SSM states + shared-attn KV caches."""
+    h = L.embed(params["embed"], batch["tokens"], cfg, _cdt(cfg))
+    h = constrain(h, "dp", None, None)
+    B, Ssz, D = h.shape
+    positions = jnp.arange(Ssz, dtype=jnp.int32)[None, :].repeat(B, 0)
+    d_inner, nheads, N, conv_dim = S.ssm_dims(cfg)
+
+    def body(h, lp):
+        hn = L.rmsnorm(lp["ln"], h, cfg.norm_eps)
+        # full-seq mamba + final state extraction
+        zxbcdt = jnp.einsum("bsd,de->bse", hn, lp["block"]["in_proj"].astype(h.dtype))
+        z, xbc, dt = S._split_proj(cfg, zxbcdt)
+        conv_tail = xbc[:, -(cfg.ssm_conv_width - 1):, :]
+        xbc = S._causal_conv(xbc, lp["block"]["conv_w"].astype(h.dtype),
+                             lp["block"]["conv_b"].astype(h.dtype))
+        xin = xbc[..., :d_inner].reshape(B, Ssz, nheads, cfg.ssm_head_dim)
+        Bm = xbc[..., d_inner:d_inner + N]
+        Cm = xbc[..., d_inner + N:]
+        dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                              + lp["block"]["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(lp["block"]["A_log"].astype(jnp.float32))
+        y, fstate = S.ssd_chunked(xin, dtv, A, Bm, Cm, min(cfg.ssm_chunk, Ssz))
+        y = y + xin * lp["block"]["D"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(B, Ssz, d_inner) * jax.nn.silu(z)
+        y = L.rmsnorm(lp["block"]["norm"], y, cfg.norm_eps)
+        h = h + jnp.einsum("bse,ed->bsd", y, lp["block"]["out_proj"].astype(h.dtype))
+        return constrain(h, "dp", None, None), (fstate, conv_tail)
+
+    ks, vs = [], []
+    ssms, convs = [], []
+    for (start, size, has_attn) in _groups(cfg):
+        gp = _slice_group(params["mamba"], start, size)
+        h, (fs, ct) = uscan(body, h, gp)
+        ssms.append(fs)
+        convs.append(ct)
+        if has_attn:
+            sp = params["shared"]
+            a, (k, v) = L.attention_prefill(
+                sp["attn"], L.rmsnorm(sp["ln1"], h, cfg.norm_eps), cfg, positions)
+            h = h + a
+            h = h + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+            h = constrain(h, "dp", None, None)
+            ks.append(k)
+            vs.append(v)
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], W).astype(jnp.float32)
+    caches = {
+        "ssm": jnp.concatenate(ssms, 0).reshape(cfg.num_layers, B, nheads,
+                                                cfg.ssm_head_dim, N),
+        "conv": jnp.concatenate(convs, 0).reshape(cfg.num_layers, B,
+                                                  cfg.ssm_conv_width - 1, conv_dim),
+        "k": jnp.stack(ks, 0),
+        "v": jnp.stack(vs, 0),
+    }
+    return logits, caches
+
+
+def decode_step(params, caches, batch, cfg):
+    B = batch["token"].shape[0]
+    h = L.embed(params["embed"], batch["token"][:, None], cfg, _cdt(cfg))
+    pos = batch["pos"]
+
+    def body(h, xs):
+        lp, ssm_c, conv_c = xs
+        hn = L.rmsnorm(lp["ln"], h, cfg.norm_eps)
+        y, new_cache = S.mamba2_decode(lp["block"], hn, cfg,
+                                       {"ssm": ssm_c, "conv": conv_c})
+        return h + y, (new_cache["ssm"], new_cache["conv"])
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    gi = 0
+    for (start, size, has_attn) in _groups(cfg):
+        gp = _slice_group(params["mamba"], start, size)
+        ssm_g = jax.lax.slice_in_dim(caches["ssm"], start, start + size, axis=0)
+        conv_g = jax.lax.slice_in_dim(caches["conv"], start, start + size, axis=0)
+        h, (s_new, c_new) = uscan(body, h, (gp, ssm_g, conv_g))
+        new_ssm.append(s_new)
+        new_conv.append(c_new)
+        if has_attn:
+            sp = params["shared"]
+            a, ck, cv = L.attention_decode(
+                sp["attn"], L.rmsnorm(sp["ln1"], h, cfg.norm_eps), cfg,
+                caches["k"][gi], caches["v"][gi], pos)
+            h = h + a
+            h = h + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+            new_k.append(ck)
+            new_v.append(cv)
+            gi += 1
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], W).astype(jnp.float32)
+    caches = {
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "conv": jnp.concatenate(new_conv, 0),
+        "k": jnp.stack(new_k, 0),
+        "v": jnp.stack(new_v, 0),
+    }
+    return logits, caches

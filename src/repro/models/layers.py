@@ -1,0 +1,385 @@
+"""Shared transformer building blocks (pure JAX, functional).
+
+All functions take explicit parameter pytrees built from ParamDecl
+declarations (see decls_* builders) so init / abstract-eval / sharding stay
+in sync.  Attention supports:
+
+  * GQA grouped layout (B, S, Hkv, G, Dh) — never materializes repeated KV
+  * RoPE / M-RoPE (multimodal 3-section rope) / NoPE
+  * optional qk-norm (Qwen3)
+  * plain (seq<=attn_chunk or chunk=0) and q-chunked flash-style paths
+  * single-token decode against a (B, T, Hkv, Dh) KV cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import decl
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def decls_rmsnorm(d):
+    return {"scale": decl((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def decls_layernorm(d):
+    return {"scale": decl((d,), (None,), init="ones"),
+            "bias": decl((d,), (None,), init="zeros")}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,Dh/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """M-RoPE (Qwen2-VL): positions (3, ..., S) for (t, h, w) sections.
+
+    ``sections`` are half-dim sizes summing to Dh/2; frequency slot f uses the
+    (t|h|w) position stream its section assigns.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=dh // 2)    # (Dh/2,)
+    pos = positions.astype(jnp.float32)                 # (3, ..., S)
+    ang_all = pos[..., None] * freqs                    # (3, ..., S, Dh/2)
+    sel = jax.nn.one_hot(sec_id, len(sections), dtype=jnp.float32)  # (Dh/2, 3)
+    ang = jnp.einsum("k...f,fk->...f", ang_all, sel)    # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def padded_heads(cfg, axis: int = 16) -> int:
+    """Flat q-head count after per-kv-group zero padding: the smallest
+    Hkv·Gp ≥ H with Hkv·Gp divisible by the TP axis.  Keeps each real head's
+    kv assignment (head h uses kv h // Gp) while making the flat head dim
+    TP-shardable — fixes the 16× attention-compute replication of archs with
+    H % 16 != 0 (llama3.2 24H, qwen2-vl 12H).  Padded heads have zero
+    wq/wo slices, so the function is exactly the unpadded model's."""
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    if not getattr(cfg, "pad_head_groups", False) or Hkv == 0 or H % axis == 0:
+        return H
+    gp = H // Hkv
+    while (Hkv * gp) % axis != 0:
+        gp += 1
+    return Hkv * gp
+
+
+def eff_heads(cfg) -> int:
+    return padded_heads(cfg)
+
+
+def decls_attention(cfg):
+    """Flat-head layout.  KV heads are repeated to H at compute time
+    (Megatron-style KV replication), so TP works whenever H divides the
+    model axis even if Hkv does not; when neither divides, heads resolve to
+    replicated and attention runs FSDP-style (batch-sharded activations) —
+    unless cfg.pad_head_groups zero-pads the head dim (see padded_heads)."""
+    D, Hkv, Dh = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    H = eff_heads(cfg)
+    d = {
+        "wq": decl((D, H, Dh), ("fsdp", "qheads", None)),
+        "wk": decl((D, Hkv, Dh), ("fsdp", "tp_kv", None)),
+        "wv": decl((D, Hkv, Dh), ("fsdp", "tp_kv", None)),
+        "wo": decl((H, Dh, D), ("qheads", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = decls_rmsnorm(Dh)
+        d["k_norm"] = decls_rmsnorm(Dh)
+    return d
+
+
+def _project_qkv(p, x, cfg, positions):
+    """x (B,S,D) → q (B,S,H,Dh), k/v (B,S,Hkv,Dh), rope applied."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "dp", None, "qheads", None)
+    return q, k, v
+
+
+def _repeat_kv(k, H):
+    """(B,S,Hkv,Dh) → (B,S,H,Dh); head h uses kv head h // (H//Hkv)."""
+    Hkv = k.shape[2]
+    if Hkv == H:
+        return k
+    return jnp.repeat(k, H // Hkv, axis=2)
+
+
+def _attend(q, k, v, mask_fn, scale):
+    """q (B,Sq,H,Dh), k/v (B,Skv,H,Dh) → (B,Sq,H,Dh).
+
+    mask_fn(q_idx (Sq,), k_idx (Skv,)) -> bool (Sq,Skv), True = attend.
+    """
+    scores = jnp.einsum("bqhe,bshe->bhqs", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    Sq, Skv = q.shape[1], k.shape[1]
+    if mask_fn is not None:
+        m = mask_fn(jnp.arange(Sq), jnp.arange(Skv))
+        scores = jnp.where(m[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshe->bqhe", probs, v)
+
+
+def _attend_seq(q, k, v, cfg, causal):
+    """Dispatch plain vs. q-chunked attention.  All flat-head."""
+    B, S, H, Dh = q.shape
+    scale = cfg.head_dim ** -0.5
+    kr, vr = _repeat_kv(k, H), _repeat_kv(v, H)
+    chunk = cfg.attn_chunk
+    if chunk and S > chunk and S % chunk == 0:
+        nchunks = S // chunk
+
+        def body(c, _):
+            qc = jax.lax.dynamic_slice_in_dim(q, c * chunk, chunk, axis=1)
+            base = c * chunk
+
+            def mask_fn(qi, ki):
+                return (base + qi)[:, None] >= ki[None, :]
+            o = _attend(qc, kr, vr, mask_fn if causal else None, scale)
+            return c + 1, o
+
+        _, out = uscan(body, 0, None, length=nchunks)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, Dh)
+    else:
+        mask_fn = (lambda qi, ki: qi[:, None] >= ki[None, :]) if causal else None
+        out = _attend(q, kr, vr, mask_fn, scale)
+    return out
+
+
+def attention(p, x, cfg, positions=None, *, causal=True):
+    """Full-sequence attention.  Chunked over queries when cfg.attn_chunk>0."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = _attend_seq(q, k, v, cfg, causal)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_prefill(p, x, cfg, positions=None, *, causal=True):
+    """Like attention() but also returns the (k, v) cache tensors."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = _attend_seq(q, k, v, cfg, causal)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, pos, positions=None):
+    """Single-token decode.
+
+    x (B,1,D); cache_k/v (B,T,Hkv,Dh) with valid entries < pos; pos (B,) or
+    scalar; positions overrides the rope stream (M-RoPE: (3,B,1)).
+    Returns (y (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    H = eff_heads(cfg)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    if positions is None:
+        positions = posb[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # write new kv at pos — scatter touches only B rows; the one-hot-multiply
+    # alternative also burns a full-cache-sized multiply-add per layer
+    # (glm4 decode_32k: −14% HLO FLOPs, useful 0.30→0.35 — EXPERIMENTS §Perf)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, posb].set(k[:, 0], mode="drop")
+    cache_v = cache_v.at[bidx, posb].set(v[:, 0], mode="drop")
+    cache_k = constrain(cache_k, "dp", "kvseq", "kvheads", None)
+    cache_v = constrain(cache_v, "dp", "kvseq", "kvheads", None)
+    kr, vr = _repeat_kv(cache_k, H), _repeat_kv(cache_v, H)
+    # repeated layout: keep time XOR heads sharded (flash-decoding style —
+    # GSPMD inserts the partial-softmax combine over the sharded axis)
+    kr = constrain(kr, "dp", "dkr_t", "dkr_h", None)
+    vr = constrain(vr, "dp", "dkr_t", "dkr_h", None)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bqhe,bshe->bhqs", q, kr) * scale
+    scores = scores.astype(jnp.float32)
+    mask = jnp.arange(T)[None, :] <= posb[:, None]             # (B,T)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshe->bqhe", probs, vr)
+    y = jnp.einsum("bqhe,hed->bqd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def attention_cross(p, x, enc_kv, cfg):
+    """Cross attention against precomputed encoder (k, v)."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    scale = cfg.head_dim ** -0.5
+    out = _attend(q, _repeat_kv(k, eff_heads(cfg)),
+                  _repeat_kv(v, eff_heads(cfg)), None, scale)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_kv(p, enc_out, cfg):
+    k = jnp.einsum("bsd,dkh->bskh", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dkh->bskh", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def decls_mlp(cfg, d_ff: Optional[int] = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {"w_gate": decl((D, F), ("fsdp", "tp")),
+                "w_up": decl((D, F), ("fsdp", "tp")),
+                "w_down": decl((F, D), ("tp", "fsdp"))}
+    return {"w_up": decl((D, F), ("fsdp", "tp")),
+            "w_down": decl((F, D), ("tp", "fsdp"))}
+
+
+def mlp(p, x, cfg):
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(h) if cfg.mlp_type == "gelu" else jnp.square(jax.nn.relu(h))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def decls_embedding(cfg):
+    V, D = cfg.vocab_size, cfg.d_model
+    d = {"tok": decl((V, D), ("vocab", "fsdp"), scale=1.0, init="normal")}
+    if not cfg.tie_embeddings:
+        d["out"] = decl((D, V), ("fsdp", "vocab"))
+    return d
+
+
+def embed(p, tokens, cfg, compute_dtype):
+    return p["tok"].astype(compute_dtype)[tokens]
+
+
+def unembed_matrix(p, cfg, dtype):
+    if cfg.tie_embeddings:
+        return p["tok"].astype(dtype).T
+    return p["out"].astype(dtype)
+
+
+def softmax_xent(logits, targets, mask=None):
+    """logits (..., V) f32; targets (...) i32; mean over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(p_emb, h, targets, cfg, mask=None):
+    """Final-hidden → loss; chunked over sequence when cfg.loss_chunk>0.
+
+    Chunking avoids materializing the (B,S,V) logits tensor — the backward
+    pass recomputes per-chunk logits (jax.checkpoint), turning an O(B*S*V)
+    memory term into O(B*loss_chunk*V).
+    """
+    W = unembed_matrix(p_emb, cfg, h.dtype)             # (D,V)
+    B, S, D = h.shape
+    chunk = cfg.loss_chunk
+    if not chunk or S <= chunk or S % chunk != 0:
+        logits = jnp.einsum("bsd,dv->bsv", h, W)
+        return softmax_xent(logits, targets, mask)
+
+    nch = S // chunk
+
+    @jax.checkpoint
+    def chunk_loss(hc, tc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, W).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mc is None:
+            return jnp.sum(nll), jnp.array(float(nll.size), jnp.float32)
+        return jnp.sum(nll * mc), jnp.sum(mc)
+
+    def body(carry, idx):
+        tot, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, 1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, idx * chunk, chunk, 1)
+        mc = (jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, 1)
+              if mask is not None else None)
+        s, c = chunk_loss(hc, tc, mc)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = uscan(body, (jnp.float32(0), jnp.float32(0)),
+                                 jnp.arange(nch))
+    return tot / jnp.maximum(cnt, 1.0)

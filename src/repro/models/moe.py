@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer (GShard-style capacity, EP over the model axis).
+
+TPU-native formulation ("gather-capacity MoE"): instead of the CUDA-idiomatic
+token-permute + grouped-GEMM, each expert gathers its top-C tokens directly —
+
+  1. router logits (T, E) → per-token top-k experts + weights
+  2. per-expert scores (E, DS, T_l): routing weight where routed, -inf else,
+     with the token axis pre-split into DS data shards so the per-expert
+     top-C is computed *locally per data shard* (no cross-shard collective,
+     identical semantics to all-to-all dispatch with per-shard capacity)
+  3. per-expert top-C token indices → batched gather (E, DS, C, D) buffers
+  4. dense batched expert matmuls   (E, DS, C, D) @ (E, D, F) — MXU-aligned
+  5. scatter-add back with combine weights → (T, D); GSPMD reduces the
+     expert-sharded partials with a single psum over the model axis
+
+With E sharded over ``model`` this is expert parallelism whose only
+collective is that psum — the same volume as a row-parallel TP matmul, with
+no all-to-all over slow links.  Tokens beyond an expert's per-shard capacity
+C = cf·k·T_l/E are dropped (GShard semantics); the residual carries them.
+Router runs in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import decl
+from repro.distributed.sharding import constrain, ctx_dp_size
+
+
+def decls_moe(cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    E = cfg.num_experts_padded
+    d = {
+        "router": decl((D, E), ("fsdp", None), scale=1.0),
+        "w_gate": decl((E, D, F), ("expert", "fsdp", None)),
+        "w_up": decl((E, D, F), ("expert", "fsdp", None)),
+        "w_down": decl((E, F, D), ("expert", None, "fsdp")),
+    }
+    if cfg.shared_expert_ff:
+        d["shared"] = {
+            "w_gate": decl((D, cfg.shared_expert_ff), ("fsdp", "tp")),
+            "w_up": decl((D, cfg.shared_expert_ff), ("fsdp", "tp")),
+            "w_down": decl((cfg.shared_expert_ff, D), ("tp", "fsdp")),
+        }
+    return d
+
+
+def capacity(cfg, tokens_per_shard: int) -> int:
+    E = cfg.num_experts_padded
+    c = int(cfg.capacity_factor * cfg.moe_top_k * tokens_per_shard / E)
+    # MXU alignment: round up to a multiple of 8 (sublane), min 8
+    c = max(8, -(-c // 8) * 8)
+    return min(c, tokens_per_shard)
+
+
+def moe_mlp(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) → (y (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts_padded, cfg.moe_top_k
+    DS = ctx_dp_size()
+    if T % DS != 0:
+        DS = 1
+    Tl = T // DS
+    C = capacity(cfg, Tl)
+
+    xt = x.reshape(DS, Tl, D)
+    xt = constrain(xt, "dp", None, None)
+    logits = jnp.einsum("ntd,de->nte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))            # (DS,Tl,E)
+    if cfg.num_experts_padded > cfg.num_experts:
+        pad_mask = jnp.arange(E) < cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                             # (DS,Tl,K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)              # (DS,Tl,K,E)
+    w_te = jnp.einsum("ntke,ntk->nte", onehot, topw)                 # (DS,Tl,E)
+    scores = jnp.where(w_te > 0.0, w_te, -jnp.inf)
+    scores = jnp.moveaxis(scores, -1, 0)                             # (E,DS,Tl)
+    scores = constrain(scores, "expert", "dp", None)
+
+    gathered_w, idx = jax.lax.top_k(scores, C)                       # (E,DS,C)
+    valid = jnp.isfinite(gathered_w)
+    gate_w = jnp.where(valid, gathered_w, 0.0)                       # (E,DS,C)
+
+    # batched gather: per data shard, gather each expert's C tokens
+    idx_flat = jnp.moveaxis(idx, 0, 1).reshape(DS, E * C)            # (DS,E*C)
+    buf = jnp.take_along_axis(xt, idx_flat[..., None], axis=1)       # (DS,E*C,D)
+    buf = jnp.moveaxis(buf.reshape(DS, E, C, D), 1, 0)               # (E,DS,C,D)
+    buf = buf * valid[..., None].astype(buf.dtype)
+    buf = constrain(buf, "expert", "dp", None, None)
+
+    g = jnp.einsum("encd,edf->encf", buf, p["w_gate"].astype(buf.dtype))
+    u = jnp.einsum("encd,edf->encf", buf, p["w_up"].astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("encf,efd->encd", h, p["w_down"].astype(buf.dtype))
+    out = out * gate_w[..., None].astype(out.dtype)                  # (E,DS,C,D)
+
+    # scatter-add back: (DS, Tl, D) ← sum over experts' contributions
+    out_flat = jnp.moveaxis(out, 0, 1).reshape(DS, E * C, D)
+    y = jnp.zeros((DS, Tl, D), out.dtype)
+    y = y.at[jnp.arange(DS)[:, None], idx_flat].add(out_flat, mode="drop")
+    y = constrain(y, "dp", None, None)
+    y = y.reshape(B, S, D)
+
+    if cfg.shared_expert_ff:
+        sp = p["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(x.dtype))
+        su = jnp.einsum("bsd,df->bsf", x, sp["w_up"].astype(x.dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(sg) * su,
+                           sp["w_down"].astype(x.dtype))
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean((0, 1))                                          # (E,)
+    fe = onehot.sum(2).mean((0, 1))                                  # (E,)
+    aux = cfg.num_experts * jnp.sum(me * fe) / max(K, 1)
+    return y, aux.astype(jnp.float32)

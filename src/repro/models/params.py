@@ -1,0 +1,104 @@
+"""Parameter declaration system.
+
+Every model declares its parameters ONCE as a pytree of :class:`ParamDecl`
+(shape, dtype, logical sharding axes, initializer).  From that single
+declaration we derive, guaranteed-consistent:
+
+  * ``init_params``      — materialized arrays (CPU tests / real training)
+  * ``abstract_params``  — ShapeDtypeStructs (AOT dry-run, no allocation)
+  * ``logical_specs``    — pytree of logical PartitionSpecs
+  * ``physical_specs``   — resolved against mesh rules (distributed/sharding.py)
+
+Logical axis names used throughout the model zoo:
+
+  ``fsdp``    parameter shard axis (ZeRO-3 over the data axis)
+  ``tp``      tensor-parallel axis (model axis)
+  ``tp_kv``   kv-head dims — resolves to ``tp`` only when divisible
+  ``expert``  expert-parallel axis (model axis)
+  ``dp``      batch axis for activations ((pod, data) on multi-pod meshes)
+  ``kvseq``   KV-cache sequence axis for decode (resolves per config)
+  ``None``    replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Logical = Tuple[Any, ...]  # tuple of logical axis names (str or None)
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Logical                       # logical sharding, len == len(shape)
+    init: str = "normal"                # normal | zeros | ones | scaled
+    scale: float = 1.0                  # stddev multiplier (fan-in applied for 'scaled')
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def decl(shape, axes, init="scaled", scale=1.0, dtype=jnp.float32) -> ParamDecl:
+    return ParamDecl(tuple(int(s) for s in shape), dtype, tuple(axes), init, scale)
+
+
+# ---------------------------------------------------------------------------
+# Derivations
+# ---------------------------------------------------------------------------
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def tree_map_decls(fn: Callable[[ParamDecl], Any], decls):
+    return jax.tree.map(fn, decls, is_leaf=_is_decl)
+
+
+def abstract_params(decls, dtype_override: Optional[Any] = None):
+    def mk(d: ParamDecl):
+        return jax.ShapeDtypeStruct(d.shape, dtype_override or d.dtype)
+    return tree_map_decls(mk, decls)
+
+
+def logical_specs(decls):
+    from jax.sharding import PartitionSpec as P
+    return tree_map_decls(lambda d: P(*d.axes), decls)
+
+
+def init_params(decls, rng: jax.Array, dtype_override: Optional[Any] = None):
+    """Materialize parameters.  Deterministic per-leaf folding of the key."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    out = []
+    for i, d in enumerate(leaves):
+        dt = dtype_override or d.dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        elif d.init == "normal":
+            out.append((jax.random.normal(keys[i], d.shape) * d.scale).astype(dt))
+        elif d.init == "scaled":  # fan-in scaled (truncated-normal-ish)
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(keys[i], d.shape) * std).astype(dt))
+        else:
+            raise ValueError(f"unknown init {d.init!r}")
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=_is_decl)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def param_bytes(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=_is_decl)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)

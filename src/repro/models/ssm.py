@@ -1,0 +1,197 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Training path: chunked SSD algorithm — intra-chunk quadratic (attention-like,
+MXU-friendly) + inter-chunk linear recurrence carried by lax.scan, so memory
+is O(S·L_chunk) not O(S²) and the 500k-token decode state is O(1).
+
+Decode path: single-step recurrence over the (nheads, P, N) state plus a
+rolling causal-conv buffer.
+
+Simplifications vs. the reference CUDA implementation (documented in
+DESIGN.md): ngroups=1 (B/C shared across heads), no variance-reduced init.
+Heads are sharded over the ``tp`` axis; B/C (state projections) replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+
+from repro.models.params import decl
+from repro.models.layers import decls_rmsnorm, rmsnorm
+from repro.distributed.sharding import constrain
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N            # conv over [x, B, C]
+    return d_inner, nheads, N, conv_dim
+
+
+def decls_mamba2(cfg):
+    D = cfg.d_model
+    d_inner, nheads, N, conv_dim = ssm_dims(cfg)
+    # in_proj → [z (d_inner), x (d_inner), B (N), C (N), dt (nheads)]
+    return {
+        "in_proj": decl((D, 2 * d_inner + 2 * N + nheads), ("fsdp", "tp")),
+        "conv_w": decl((cfg.ssm_conv_width, conv_dim), (None, "tp")),
+        "conv_b": decl((conv_dim,), ("tp",), init="zeros"),
+        "A_log": decl((nheads,), ("tp",), init="zeros"),
+        "D": decl((nheads,), ("tp",), init="ones"),
+        "dt_bias": decl((nheads,), ("tp",), init="zeros"),
+        "norm": decls_rmsnorm(d_inner),
+        "out_proj": decl((d_inner, D), ("tp", "fsdp")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads, N, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def _segsum(a):
+    """a (..., L) → (..., L, L) with out[i,j] = sum_{j<k<=i} a[k], -inf above diag."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD forward.
+
+    x (B,S,nh,P); dt (B,S,nh) post-softplus; A (nh,) negative;
+    Bm/Cm (B,S,N) shared across heads.  Returns (y (B,S,nh,P),
+    final_state (B,nh,P,N) f32).
+    """
+    Bsz, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    xc = x.reshape(Bsz, nc, chunk, nh, P)
+    dtc = dt.reshape(Bsz, nc, chunk, nh).astype(jnp.float32)
+    bc = Bm.reshape(Bsz, nc, chunk, N)
+    cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,L,nh) ≤ 0
+    dA = jnp.moveaxis(dA, -1, 1)                          # (B,nh,nc,L)
+    A_cum = jnp.cumsum(dA, axis=-1)                       # (B,nh,nc,L)
+
+    # ---- intra-chunk (diagonal blocks) ----
+    Lmat = jnp.exp(_segsum(dA))                           # (B,nh,nc,L,L)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)        # (B,nc,L,L)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]         # x*dt (B,nc,L,nh,P)
+    y_diag = jnp.einsum("bcij,bhcij,bcjhp->bcihp",
+                        scores.astype(jnp.float32), Lmat, xdt)  # (B,nc,L,nh,P)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)       # (B,nh,nc,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc.astype(jnp.float32), decay_states,
+                        xdt.astype(jnp.float32))          # (B,nc,nh,P,N)
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) ----
+    chunk_decay = jnp.exp(A_cum[..., -1])                 # (B,nh,nc)
+    init = (jnp.zeros((Bsz, nh, P, N), jnp.float32)
+            if init_state is None else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                     # (B,nh,P,N), (B,nh)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit state *entering* chunk
+
+    sts = jnp.moveaxis(states, 1, 0)                      # (nc,B,nh,P,N)
+    decs = jnp.moveaxis(chunk_decay, -1, 0)               # (nc,B,nh)
+    final_state, prev_states = uscan(step, init, (sts, decs))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,nh,P,N)
+
+    # ---- state → output ----
+    out_decay = jnp.exp(A_cum)                            # (B,nh,nc,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cc.astype(jnp.float32), prev_states, out_decay)
+    y = (y_diag + y_off).reshape(Bsz, S, nh, P).astype(x.dtype)
+    return y, final_state
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv: xbc (B,S,Cd), w (K,Cd), b (Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba2_block(p, h, cfg):
+    """Full-sequence forward: h (B,S,D) → (B,S,D)."""
+    d_inner, nheads, N, conv_dim = ssm_dims(cfg)
+    B, S, D = h.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(h.dtype), p["conv_b"].astype(h.dtype))
+    xin = xbc[..., :d_inner].reshape(B, S, nheads, cfg.ssm_head_dim)
+    xin = constrain(xin, "dp", None, "tp", None)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xin, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + xin * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+def mamba2_cache_shape(cfg, batch: int):
+    d_inner, nheads, N, conv_dim = ssm_dims(cfg)
+    return {
+        "ssm": (batch, nheads, cfg.ssm_head_dim, N),        # f32
+        "conv": (batch, cfg.ssm_conv_width - 1, conv_dim),  # compute dtype
+    }
+
+
+def mamba2_decode(p, h, cfg, cache):
+    """h (B,1,D); cache {"ssm": (B,nh,P,N) f32, "conv": (B,K-1,Cd)}."""
+    d_inner, nheads, N, conv_dim = ssm_dims(cfg)
+    B = h.shape[0]
+    P = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)                   # xbc (B,1,Cd)
+    # rolling conv buffer
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,K,Cd)
+    new_conv = window[:, 1:, :]
+    w = p["conv_w"].astype(h.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(h.dtype)
+    xbc1 = jax.nn.silu(conv_out)                            # (B,Cd)
+    xin = xbc1[:, :d_inner].reshape(B, nheads, P)
+    Bm = xbc1[:, d_inner:d_inner + N]                       # (B,N)
+    Cm = xbc1[:, d_inner + N:]                              # (B,N)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (nh,)
+    dA = jnp.exp(dtv * A[None, :])                          # (B,nh)
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dtv, xin.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    new_state = cache["ssm"] * dA[..., None, None] + dBx    # (B,nh,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    y = y.astype(h.dtype) + xin * p["D"].astype(h.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(h.dtype))
+    return out, {"ssm": new_state, "conv": new_conv}

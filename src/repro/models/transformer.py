@@ -1,0 +1,216 @@
+"""Decoder-only LM (dense & MoE) with a unified step API.
+
+Parameters are declared per-layer then *stacked* with a leading layer axis so
+the layer stack runs under lax.scan (one compiled layer body regardless of
+depth — essential for the 61-layer MoE dry-runs).  Remat policy is applied to
+the scan body.  The same module backs the VLM config (M-RoPE + stubbed patch
+embeddings injected over a fixed prefix).
+
+Step functions (built by api.py into jit-able closures):
+  loss(params, batch)                      batch: tokens/targets/(mask/positions/vision_embeds)
+  prefill(params, batch) -> (logits, caches)
+  decode(params, caches, batch) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from repro.models.unroll import scan as uscan
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import decl, ParamDecl, tree_map_decls
+from repro.models.moe import decls_moe, moe_mlp
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def stack_decls(decls, n: int):
+    """Add a leading layer axis (replicated) to every decl in the subtree."""
+    def one(d: ParamDecl):
+        return ParamDecl((n,) + d.shape, d.dtype, (None,) + d.axes, d.init, d.scale)
+    return tree_map_decls(one, decls)
+
+
+def decls_layer(cfg):
+    d = {
+        "ln1": L.decls_rmsnorm(cfg.d_model),
+        "attn": L.decls_attention(cfg),
+        "ln2": L.decls_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_moe:
+        d["moe"] = decls_moe(cfg)
+    else:
+        d["mlp"] = L.decls_mlp(cfg)
+    return d
+
+
+def decls_lm(cfg):
+    d = {
+        "embed": L.decls_embedding(cfg),
+        "layers": stack_decls(decls_layer(cfg), cfg.num_layers),
+        "ln_f": L.decls_rmsnorm(cfg.d_model),
+    }
+    if not cfg.use_rope:
+        d["pos_emb"] = decl((cfg.max_seq, cfg.d_model), (None, "fsdp"),
+                            init="normal", scale=0.02)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _layer_fwd(lp, h, cfg, positions):
+    a = L.attention(lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.norm_eps), cfg,
+                    positions)
+    h = h + a
+    hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    if cfg.is_moe:
+        m, aux = moe_mlp(lp["moe"], hn, cfg)
+    else:
+        m, aux = L.mlp(lp["mlp"], hn, cfg), jnp.float32(0)
+    h = h + m
+    h = constrain(h, "dp", None, None)
+    return h, aux
+
+
+def _embed_input(params, batch, cfg):
+    h = L.embed(params["embed"], batch["tokens"], cfg, _cdt(cfg))
+    if "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(h.dtype)         # (B, VP, D)
+        h = jax.lax.dynamic_update_slice(h, ve, (0, 0, 0))
+    if "pos_emb" in params:
+        S = h.shape[1]
+        pos = batch.get("positions")
+        if pos is not None and pos.ndim == 2:
+            pe = params["pos_emb"].astype(h.dtype)[pos]     # (B,S,D)
+        else:
+            pe = params["pos_emb"].astype(h.dtype)[:S][None]
+        h = h + pe
+    return constrain(h, "dp", None, None)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _positions(batch, cfg, B, S):
+    pos = batch.get("positions")
+    if pos is None:
+        return jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    return pos
+
+
+def forward(params, batch, cfg):
+    """tokens → final hidden states (B,S,D).  Scan over the layer stack."""
+    h = _embed_input(params, batch, cfg)
+    B, S, D = h.shape
+    positions = _positions(batch, cfg, B, S)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _layer_fwd(lp, h, cfg, positions)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        (h, aux), _ = uscan(body, (h, jnp.float32(0)), params["layers"])
+    else:
+        aux = jnp.float32(0)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (h, aux), _ = body((h, aux), lp)
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h, aux
+
+
+def loss_fn(params, batch, cfg):
+    h, aux = forward(params, batch, cfg)
+    loss = L.lm_loss(params["embed"], h, batch["targets"], cfg,
+                     batch.get("mask"))
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode / prefill
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg, batch: int, cache_len: int):
+    """Abstract KV cache: dict of stacked (L,B,T,Hkv,Dh) ParamDecls."""
+    Hkv, Dh, Lyr = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    axes = (None, "dp", "kvseq", "kvheads", None)
+    shape = (Lyr, batch, cache_len, Hkv, Dh)
+    return {"k": ParamDecl(shape, _cdt(cfg), axes, "zeros"),
+            "v": ParamDecl(shape, _cdt(cfg), axes, "zeros")}
+
+
+def prefill(params, batch, cfg):
+    """Forward over the prompt, returning last-token logits + KV caches."""
+    h = _embed_input(params, batch, cfg)
+    B, S, D = h.shape
+    positions = _positions(batch, cfg, B, S)
+
+    def body(h, lp):
+        a, (k, v) = L.attention_prefill(
+            lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.norm_eps), cfg, positions)
+        h = h + a
+        hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        m = (moe_mlp(lp["moe"], hn, cfg)[0] if cfg.is_moe
+             else L.mlp(lp["mlp"], hn, cfg))
+        h = constrain(h + m, "dp", None, None)
+        return h, (k, v)
+
+    body = _remat(body, cfg)
+    h, (ks, vs) = uscan(body, h, params["layers"])
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], W).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, caches, batch, cfg):
+    """One decode step.  batch: {"token": (B,), "pos": (B,)}."""
+    B = batch["token"].shape[0]
+    tok = batch["token"][:, None]                            # (B,1)
+    ebatch = {"tokens": tok}
+    if "positions" in batch:
+        ebatch["positions"] = batch["positions"]
+    elif "pos_emb" in params:
+        ebatch["positions"] = batch["pos"][:, None]
+    h = _embed_input(params, ebatch, cfg)
+    pos = batch["pos"]
+    rope_positions = batch.get("positions") if cfg.mrope_sections else None
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        a, ck, cv = L.attention_decode(
+            lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.norm_eps), cfg, ck, cv, pos,
+            positions=rope_positions)
+        h = h + a
+        hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        m = (moe_mlp(lp["moe"], hn, cfg)[0] if cfg.is_moe
+             else L.mlp(lp["mlp"], hn, cfg))
+        return h + m, (ck, cv)
+
+    h, (ks, vs) = uscan(body, h, (params["layers"], caches["k"],
+                                         caches["v"]))
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    W = L.unembed_matrix(params["embed"], cfg, h.dtype)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], W).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,40 @@
+"""Scan wrapper with a global force-unroll switch.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, ignoring trip count,
+which silently undercounts FLOPs/bytes/collectives of scanned layer stacks
+(verified empirically — see EXPERIMENTS.md §Dry-run methodology).  The
+dry-run therefore does cost measurement on reduced-depth configs compiled
+with every scan fully unrolled (trip count 1 ⇒ exact counts), then
+extrapolates linearly in depth.  Model code routes every lax.scan through
+here so that a single switch flips the whole stack.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_FORCE_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _FORCE_UNROLL
+
+
+@contextlib.contextmanager
+def force_unroll(enable: bool = True):
+    global _FORCE_UNROLL
+    prev = _FORCE_UNROLL
+    _FORCE_UNROLL = enable
+    try:
+        yield
+    finally:
+        _FORCE_UNROLL = prev
+
+
+def scan(f, init, xs, length=None, unroll=1):
+    if _FORCE_UNROLL:
+        if length is None:
+            length = jax.tree.leaves(xs)[0].shape[0]
+        unroll = max(int(length), 1)
+    return jax.lax.scan(f, init, xs, length=length, unroll=unroll)

@@ -1,0 +1,78 @@
+"""Training-step construction: grads → clip → optimizer → apply.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) →
+(params, opt_state, metrics) function used by the real training loop, the
+multi-pod dry-run, and the benchmarks.  Gradient-accumulation and the
+cross-pod gradient-compression hook live here too.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.unroll import scan as uscan
+from repro.train.optimizer import Optimizer, get_optimizer
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def make_train_step(model, cfg, opt: Optional[Optimizer] = None,
+                    grad_accum: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """grad_transform: optional (grads -> grads) hook — e.g. cross-pod
+    compressed all-reduce (train/compression.py)."""
+    opt = opt or get_optimizer(cfg)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            # split the batch leading dim into microbatches and lax.scan
+            def micro(carry, mb):
+                loss, metrics, grads = compute_grads(params, mb)
+                acc = jax.tree.map(jnp.add, carry[0], grads)
+                return (acc, carry[1] + loss), None
+
+            def reshape_mb(x):
+                return x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                 *x.shape[1:])
+
+            mbs = jax.tree.map(reshape_mb, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, lsum), _ = uscan(micro, (zero, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {"loss": loss, "aux": jnp.float32(0)}
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        if cfg.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        updates, opt_state = opt.update(grads, opt_state, params,
+                                        cfg.learning_rate)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                              updates)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step, opt

@@ -1,0 +1,26 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py forces 512.
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smoke_graph():
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    cfg = gnn_config("products", smoke=True)
+    return dataset_like(cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def smoke_gnn_cfg():
+    from repro.configs.gnn import gnn_config
+    return gnn_config("products", smoke=True)

@@ -1,0 +1,169 @@
+"""Auto-tuning: design space, surrogate R², PPO vs grid, Pareto props."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autotune.space import Space, design_space
+from repro.core.autotune.surrogate import Surrogate, GBDT, Ridge, r2_score
+from repro.core.autotune.ppo import PPOAgent, PPOConfig, VIOLATION_REWARD
+from repro.core.autotune.pareto import (pareto_front, select_endpoints,
+                                        grid_search, front_from_history)
+
+
+# ---------------------------------------------------------------------------
+# Space
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0, 1), min_size=7, max_size=7))
+@settings(max_examples=40, deadline=None)
+def test_space_decode_in_range(u):
+    sp = Space()
+    cfg = sp.decode(np.array(u))
+    assert 64 <= cfg["batch_size"] <= 1024
+    assert 1.0 <= cfg["bias_rate"] <= 16.0
+    assert cfg["parallel_mode"] in ("seq", "mode1", "mode2")
+    assert cfg["sampling_device"] in ("cpu", "device")
+
+
+def test_space_encode_decode_roundtrip():
+    sp = Space()
+    rng = np.random.default_rng(0)
+    for u in sp.sample(rng, 20):
+        cfg = sp.decode(u)
+        u2 = sp.encode(cfg)
+        cfg2 = sp.decode(u2)
+        assert cfg == cfg2
+
+
+# ---------------------------------------------------------------------------
+# Surrogate
+# ---------------------------------------------------------------------------
+
+def _synthetic_perf(u):
+    """Ground-truth-ish response surface for surrogate tests."""
+    thr = 0.1 + 0.5 * u[:, 0] + 0.8 * u[:, 4] * u[:, 6] + 0.2 * u[:, 2]
+    mem = 50e6 * (1 + 3 * u[:, 4] * (u[:, 6] > 0.33) + 2 * u[:, 5] + u[:, 0])
+    acc = 0.75 - 0.05 * u[:, 2] ** 2 + 0.01 * u[:, 5]
+    return {"throughput": thr, "memory": mem, "accuracy": acc}
+
+
+def test_surrogate_r2_reasonable():
+    """Tab. III analogue: R² comfortably above chance on held-out data."""
+    rng = np.random.default_rng(0)
+    sp = Space()
+    Xtr, Xte = sp.sample(rng, 400), sp.sample(rng, 100)
+    noise = lambda n: rng.normal(0, 0.01, n)
+    Ytr = _synthetic_perf(Xtr)
+    Ytr = {k: v * (1 + 0.02 * rng.normal(size=len(v))) for k, v in Ytr.items()}
+    Yte = _synthetic_perf(Xte)
+    s = Surrogate(n_trees=40).fit(Xtr, Ytr)
+    r2 = s.r2(Xte, Yte)
+    assert r2["throughput"] > 0.6
+    assert r2["memory"] > 0.6
+    assert r2["accuracy"] > 0.5
+
+
+def test_gbdt_beats_linear_on_nonlinear():
+    rng = np.random.default_rng(1)
+    X = rng.random((300, 4))
+    y = np.sin(6 * X[:, 0]) + (X[:, 1] > 0.5) * 2 + X[:, 2] * X[:, 3]
+    Xte = rng.random((100, 4))
+    yte = np.sin(6 * Xte[:, 0]) + (Xte[:, 1] > 0.5) * 2 + Xte[:, 2] * Xte[:, 3]
+    g = GBDT(n_trees=60).fit(X, y)
+    l = Ridge().fit(X, y)
+    assert r2_score(yte, g.predict(Xte)) > r2_score(yte, l.predict(Xte))
+    assert r2_score(yte, g.predict(Xte)) > 0.7
+
+
+# ---------------------------------------------------------------------------
+# Pareto
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_definition():
+    pts = np.array([[1, 1], [2, 0.5], [0.5, 2], [0.9, 0.9], [2, 2]])
+    idx = set(pareto_front(pts))
+    assert idx == {4}                      # (2,2) dominates everything
+    pts2 = np.array([[1, 0], [0, 1], [0.5, 0.5]])
+    assert set(pareto_front(pts2)) == {0, 1, 2}
+
+
+@given(st.integers(10, 60), st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_pareto_no_dominated_points(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3))
+    idx = pareto_front(pts)
+    front = pts[idx]
+    for i, p in enumerate(front):
+        dom = np.all(front >= p, axis=1) & np.any(front > p, axis=1)
+        assert not dom.any()
+
+
+def test_select_endpoints():
+    hist = []
+    for thr, mem, acc in [(1.0, 100.0, 0.7), (0.2, 10.0, 0.75),
+                          (0.6, 50.0, 0.72), (0.1, 90.0, 0.5)]:
+        hist.append(({"thr": thr}, {"throughput": thr, "memory": mem,
+                                    "accuracy": acc}, 0.0))
+    ep = select_endpoints(hist)
+    assert ep["T*"][1]["throughput"] == 1.0
+    assert ep["M*"][1]["memory"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# PPO (Algo. 3)
+# ---------------------------------------------------------------------------
+
+def _make_agent(w=None, constraint=None, updates=6):
+    sp = Space()
+
+    def evaluate(cfg):
+        u = sp.encode(cfg)[None]
+        m = _synthetic_perf(u)
+        return {k: float(v[0]) for k, v in m.items()}
+
+    w = w or {"throughput": 1.0, "memory": 1e-9, "accuracy": 0.5}
+    constraint = constraint or (lambda m: True)
+    return PPOAgent(sp, evaluate, w, constraint,
+                    PPOConfig(updates=updates, horizon=8, seed=0)), sp, evaluate
+
+
+def test_ppo_improves_over_random():
+    agent, sp, evaluate = _make_agent(updates=32)
+    best = agent.run()
+    assert best is not None
+    # PPO's incumbent beats the 90th percentile of a 200-point random sweep
+    rng = np.random.default_rng(0)
+    rand = sorted(agent.reward(evaluate(sp.decode(u)))
+                  for u in sp.sample(rng, 200))
+    assert agent.best_reward >= rand[int(0.9 * len(rand))]
+
+
+def test_ppo_respects_constraints():
+    """Algo. 3 line 7-8: constraint violations get the -inf reward and are
+    never selected as the recommendation."""
+    limit = 150e6
+    agent, sp, evaluate = _make_agent(
+        constraint=lambda m: m["memory"] < limit, updates=6)
+    best = agent.run()
+    assert evaluate(best)["memory"] < limit
+    viol = [r for _, m, r in agent.history if m["memory"] >= limit]
+    assert all(r == VIOLATION_REWARD for r in viol)
+
+
+def test_ppo_faster_than_grid():
+    """The paper's 2.1× exploration-efficiency claim, measured as
+    evaluations needed to reach (near-)grid-best reward."""
+    agent, sp, evaluate = _make_agent(updates=32)
+    agent.run()
+    reward = lambda m: agent.reward(m)
+    _, grid_best, grid_evals, _ = grid_search(sp, evaluate, reward,
+                                              points_per_dim=3)
+    to_match = None
+    for i, (_, m, r) in enumerate(agent.history):
+        if r >= grid_best * 0.9:
+            to_match = i + 1
+            break
+    assert to_match is not None, \
+        f"PPO never reached 0.9×grid ({agent.best_reward} vs {grid_best})"
+    assert to_match < grid_evals / 2, (to_match, grid_evals)

@@ -1,0 +1,74 @@
+"""Feature cache: policies, device map consistency, hit accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import FeatureCache
+from repro.core.locality import expected_hit_rate
+
+
+def test_static_cache_holds_hottest(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.02, policy="static")
+    assert c.capacity > 0
+    hot = smoke_graph.hotness_order()[:c.capacity]
+    assert c.is_cached(hot).all()
+    # cached rows store the right features
+    ids = hot[:10]
+    np.testing.assert_allclose(c.fetch(ids), smoke_graph.features[ids])
+
+
+def test_fetch_correct_for_hits_and_misses(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.02, policy="static")
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, smoke_graph.num_nodes, 500)
+    np.testing.assert_allclose(c.fetch(ids), smoke_graph.features[ids])
+    st_ = c.stats
+    assert st_.hits + st_.misses == 500
+    assert st_.bytes_from_host == st_.misses * smoke_graph.feat_dim * 4
+
+
+def test_fifo_inserts_and_evicts(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.01, policy="fifo")
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, smoke_graph.num_nodes, 200)
+    c.fetch(ids)
+    recent = np.unique(ids)[-3:]
+    # repeated fetch of recently-inserted ids must hit
+    c.stats.reset()
+    c.fetch(ids[-5:])
+    assert c.stats.hits > 0
+    # device map and slot owner stay consistent
+    owners = c.slot_owner[c.slot_owner >= 0]
+    for slot, owner in enumerate(c.slot_owner):
+        if owner >= 0:
+            assert c.device_map[owner] == slot
+
+
+@given(vol=st.floats(0.001, 0.2), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_device_map_invariant(smoke_graph, vol, seed):
+    c = FeatureCache(smoke_graph, volume_mb=vol, policy="fifo", seed=seed)
+    rng = np.random.default_rng(seed)
+    c.fetch(rng.integers(0, smoke_graph.num_nodes, 300))
+    cached = np.where(c.device_map >= 0)[0]
+    assert len(cached) <= c.capacity
+    # bijection between cached ids and owned slots
+    slots = c.device_map[cached]
+    assert len(np.unique(slots)) == len(slots)
+    assert (c.slot_owner[slots] == cached).all()
+
+
+def test_zero_volume_cache(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.0, policy="static")
+    assert c.capacity == 0
+    ids = np.arange(10)
+    np.testing.assert_allclose(c.fetch(ids), smoke_graph.features[ids])
+    assert c.stats.hit_rate == 0.0
+
+
+def test_hit_rate_model_monotone():
+    """Analytic model: hit rate grows with γ and with cache fraction."""
+    hr = [expected_hit_rate(0.05, g) for g in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(hr, hr[1:]))
+    hr2 = [expected_hit_rate(f, 2.0) for f in (0.01, 0.05, 0.2)]
+    assert all(b > a for a, b in zip(hr2, hr2[1:]))

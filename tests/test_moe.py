@@ -1,0 +1,91 @@
+"""MoE layer: capacity semantics, padding masks, dense-equivalence oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.moe import decls_moe, moe_mlp, capacity
+from repro.models import layers as L
+from repro.models.params import init_params
+
+RNG = np.random.default_rng(5)
+
+
+def _cfg(**kw):
+    return get_config("qwen2-moe-a2.7b", smoke=True).replace(
+        compute_dtype="float32", **kw)
+
+
+def test_single_expert_equals_dense_mlp():
+    """E=1, top-1, ample capacity ⇒ MoE == plain SwiGLU with that expert."""
+    cfg = _cfg(num_experts=1, num_experts_padded=1, moe_top_k=1,
+               capacity_factor=8.0, shared_expert_ff=0)
+    p = init_params(decls_moe(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.normal(0, 1, (2, 8, cfg.d_model)), jnp.float32)
+    y, aux = moe_mlp(p, x, cfg)
+    dense_p = {"w_gate": p["w_gate"][0], "w_up": p["w_up"][0],
+               "w_down": p["w_down"][0]}
+    y_ref = L.mlp(dense_p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_padded_experts_never_selected():
+    cfg = _cfg()     # 6 real, padded to 8
+    p = init_params(decls_moe(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(RNG.normal(0, 1, (4, 16, cfg.d_model)), jnp.float32)
+    # recompute routing exactly as the layer does
+    xt = x.reshape(1, -1, cfg.d_model)
+    logits = jnp.einsum("ntd,de->nte", xt, p["router"])
+    E = cfg.num_experts_padded
+    logits = jnp.where(jnp.arange(E)[None, None] < cfg.num_experts, logits,
+                       -1e30)
+    _, topi = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.moe_top_k)
+    assert int(jnp.max(topi)) < cfg.num_experts
+
+
+def test_capacity_drop_keeps_residual_path_shape():
+    cfg = _cfg(capacity_factor=0.1)      # aggressive drops
+    p = init_params(decls_moe(cfg), jax.random.PRNGKey(2))
+    x = jnp.asarray(RNG.normal(0, 1, (2, 32, cfg.d_model)), jnp.float32)
+    y, aux = moe_mlp(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.0
+
+
+def test_capacity_formula():
+    cfg = _cfg(capacity_factor=1.25)
+    c = capacity(cfg, 1024)
+    expect = int(1.25 * cfg.moe_top_k * 1024 / cfg.num_experts_padded)
+    assert c >= expect and c % 8 == 0
+    assert capacity(cfg, 4) <= 8           # tiny shards clamp
+
+
+def test_aux_loss_balanced_vs_skewed():
+    """Uniform routing gives aux ≈ 1; collapsed routing gives aux ≈ E/K·me0."""
+    cfg = _cfg()
+    p = init_params(decls_moe(cfg), jax.random.PRNGKey(3))
+    # balanced: zero router → uniform probs → aux = 1 exactly
+    p_bal = dict(p, router=jnp.zeros_like(p["router"]))
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, cfg.d_model)), jnp.float32)
+    _, aux_bal = moe_mlp(p_bal, x, cfg)
+    assert np.isclose(float(aux_bal), 1.0, atol=1e-3)
+    # collapsed: positive activations + one-hot router column ⇒ every token's
+    # top-1 is expert 0
+    x_pos = jnp.abs(x) + 0.1
+    router_skew = jnp.zeros_like(p["router"]).at[:, 0].set(100.0)
+    _, aux_skew = moe_mlp(dict(p, router=router_skew), x_pos, cfg)
+    assert float(aux_skew) > float(aux_bal) * 1.5
+
+
+def test_shared_expert_contributes():
+    cfg = _cfg()
+    p = init_params(decls_moe(cfg), jax.random.PRNGKey(4))
+    x = jnp.asarray(RNG.normal(0, 1, (1, 8, cfg.d_model)), jnp.float32)
+    y1, _ = moe_mlp(p, x, cfg)
+    p0 = dict(p, shared=jax.tree.map(jnp.zeros_like, p["shared"]))
+    y0, _ = moe_mlp(p0, x, cfg)
+    assert not np.allclose(np.asarray(y1), np.asarray(y0))

@@ -1,0 +1,111 @@
+"""Locality-aware sampling: Algo. 2 oracle vs vectorized ES, bias effects,
+property-based invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (reservoir_sample_ref, es_sample, es_keys,
+                                 NeighborSampler, seed_loader)
+from repro.core.cache import FeatureCache
+from repro.core.locality import bias_weight_fn
+
+
+def test_reservoir_returns_all_when_small():
+    rng = np.random.default_rng(0)
+    nb = np.arange(5)
+    w = np.ones(5)
+    out = reservoir_sample_ref(nb, w, 10, rng)
+    assert set(out) == set(nb)
+    out = es_sample(nb, w, 10, rng)
+    assert set(out) == set(nb)
+
+
+@given(n=st.integers(6, 60), m=st.integers(1, 5), seed=st.integers(0, 999))
+@settings(max_examples=30, deadline=None)
+def test_sample_size_and_uniqueness(n, m, seed):
+    rng = np.random.default_rng(seed)
+    nb = np.arange(n) * 3
+    w = rng.uniform(0.5, 5.0, n)
+    for fn in (reservoir_sample_ref, es_sample):
+        out = fn(nb, w, m, np.random.default_rng(seed))
+        assert len(out) == m
+        assert len(set(out.tolist())) == m          # no duplicates
+        assert set(out.tolist()) <= set(nb.tolist())
+
+
+def test_reservoir_and_es_same_distribution():
+    """Both implement Efraimidis–Spirakis: selection frequencies match."""
+    nb = np.arange(8)
+    w = np.array([4.0, 4.0, 1, 1, 1, 1, 1, 1])
+    m, trials = 2, 4000
+    counts = {"ref": np.zeros(8), "es": np.zeros(8)}
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(2)
+    for _ in range(trials):
+        for key, fn, rng in (("ref", reservoir_sample_ref, rng1),
+                             ("es", es_sample, rng2)):
+            out = fn(nb, w, m, rng)
+            counts[key][out] += 1
+    f_ref = counts["ref"] / (trials * m)
+    f_es = counts["es"] / (trials * m)
+    # the two implementations agree within sampling noise
+    np.testing.assert_allclose(f_ref, f_es, atol=0.03)
+    # heavy nodes selected more often
+    assert f_es[:2].mean() > 2.0 * f_es[2:].mean()
+
+
+def test_bias_increases_cached_selection(smoke_graph):
+    """γ > 1 must raise the fraction of sampled neighbors that are cached —
+    the paper's core mechanism (Fig. 2b / Fig. 7)."""
+    cache = FeatureCache(smoke_graph, volume_mb=0.05, policy="static")
+    frac = {}
+    for gamma in (1.0, 8.0):
+        wfn = bias_weight_fn(cache, gamma)
+        s = NeighborSampler(smoke_graph, (10,), weight_fn=wfn, seed=3)
+        seeds = np.arange(200)
+        mb = s.sample(seeds)
+        picked = mb.blocks[0].src_ids
+        frac[gamma] = cache.is_cached(picked).mean()
+    assert frac[8.0] > frac[1.0]
+
+
+def test_gamma_one_equals_uniform(smoke_graph):
+    """γ=1 reverts to plain random sampling (same RNG → same picks)."""
+    cache = FeatureCache(smoke_graph, volume_mb=0.05, policy="static")
+    wfn = bias_weight_fn(cache, 1.0)
+    s1 = NeighborSampler(smoke_graph, (5, 5), weight_fn=wfn, seed=7)
+    s2 = NeighborSampler(smoke_graph, (5, 5), weight_fn=None, seed=7)
+    seeds = np.arange(64)
+    b1, b2 = s1.sample(seeds), s2.sample(seeds)
+    for blk1, blk2 in zip(b1.blocks, b2.blocks):
+        assert np.array_equal(blk1.src_ids, blk2.src_ids)
+        assert np.array_equal(blk1.neigh_idx, blk2.neigh_idx)
+
+
+def test_blocks_wellformed(smoke_graph):
+    s = NeighborSampler(smoke_graph, (5, 3), seed=0)
+    seeds = np.arange(32)
+    mb = s.sample(seeds)
+    assert len(mb.blocks) == 2
+    # output hop: dst == seeds
+    assert np.array_equal(mb.blocks[-1].dst_ids, seeds)
+    for blk in mb.blocks:
+        # dst ids form the prefix of src ids
+        assert np.array_equal(blk.src_ids[:len(blk.dst_ids)], blk.dst_ids)
+        # neighbor indices inside range
+        v = blk.neigh_idx[blk.neigh_idx >= 0]
+        assert v.size == 0 or v.max() < len(blk.src_ids)
+        # sampled ids resolve to actual graph neighbors
+        for i in range(min(5, len(blk.dst_ids))):
+            nbrs = set(smoke_graph.neighbors(blk.dst_ids[i]).tolist())
+            got = blk.neigh_idx[i][blk.neigh_idx[i] >= 0]
+            assert set(blk.src_ids[got].tolist()) <= nbrs
+    # chain: hop i src == hop i-1 ... (blocks input-first)
+    for a, b in zip(mb.blocks[:-1], mb.blocks[1:]):
+        assert np.array_equal(a.dst_ids, b.src_ids)
+
+
+def test_seed_loader_partitions_train_nodes(smoke_graph):
+    batches = list(seed_loader(smoke_graph, 64, seed=0))
+    allv = np.concatenate(batches)
+    assert len(np.unique(allv)) == len(allv)          # no repeats
+    assert smoke_graph.train_mask[allv].all()

@@ -1,0 +1,68 @@
+"""Serving engine: continuous batching, slot management, correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve.engine import Engine, Request
+from repro.serve.kv_cache import KVCacheManager
+
+
+def test_kv_manager_slots():
+    kv = KVCacheManager(caches=None, batch=3, max_len=32)
+    s0 = kv.allocate(100, 4)
+    s1 = kv.allocate(101, 4)
+    assert {s0, s1} == {0, 1}
+    assert kv.utilization() == pytest.approx(2 / 3)
+    kv.advance(s0)
+    assert kv.slots[s0].length == 5
+    rid = kv.release(s0)
+    assert rid == 100 and not kv.slots[s0].active
+    assert kv.allocate(102, 40) is None        # prompt too long
+
+
+def test_engine_completes_all_requests():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    eng = Engine(cfg, batch=3, max_len=48, seed=0)
+    rng = np.random.default_rng(0)
+    for rid in range(7):                       # more requests than slots
+        prompt = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=4))
+    stats = eng.run_to_completion()
+    assert stats["completed"] == 7
+    assert all(len(r.out_tokens) == 4 for r in eng.completed)
+    assert stats["tokens"] == 28
+    # all slots freed at the end
+    assert eng.kv.free_slots() == list(range(3))
+
+
+def test_engine_greedy_matches_model():
+    """First generated token == argmax of the model's prefill logits."""
+    cfg = get_config("llama3.2-3b", smoke=True).replace(
+        compute_dtype="float32")
+    eng = Engine(cfg, batch=1, max_len=32, seed=0)
+    from repro.models.api import build
+    model = build(cfg)
+    prompt = np.array([5, 9, 3, 7], np.int32)
+    logits, _ = jax.jit(model.prefill)(
+        eng.params, {"tokens": jnp.asarray(prompt)[None]})
+    want = int(np.argmax(np.asarray(logits)[0]))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng.run_to_completion()
+    assert eng.completed[0].out_tokens[0] == want
+
+
+def test_engine_eos_stops_early():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    eng = Engine(cfg, batch=1, max_len=32, seed=0)
+    prompt = np.array([1, 2], np.int32)
+    # eos = whatever greedy emits first → stops after 1 token
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    eng.run_to_completion()
+    first = eng.completed[0].out_tokens[0]
+    eng2 = Engine(cfg, batch=1, max_len=32, seed=0)
+    eng2.submit(Request(rid=1, prompt=prompt, max_new_tokens=8,
+                        eos_id=first))
+    eng2.run_to_completion()
+    assert len(eng2.completed[0].out_tokens) == 1
