@@ -1,0 +1,18 @@
+# Tier-1 verification + fast lane.  See scripts/ci.sh for the CI entry.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast autotune-demo bench-quick
+
+test:            ## full tier-1 suite (the ROADMAP bar)
+	$(PY) -m pytest -x -q
+
+test-fast:       ## fast lane: skips the slow pipeline/system tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+autotune-demo:   ## online auto-tuning on a smoke graph (paper §III-C)
+	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
+	    --autotune --steps 6 --episodes-autotune 4
+
+bench-quick:     ## reduced benchmark sweep
+	$(PY) -m benchmarks.run --quick

@@ -17,13 +17,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.configs.gnn import gnn_config
+from repro.configs.gnn import gnn_config, AutotuneConfig
 from repro.graph.synthetic import dataset_like
 from repro.core.a3gnn import A3GNNTrainer
-from repro.core.autotune.space import Space
-from repro.core.autotune.surrogate import Surrogate
-from repro.core.autotune.ppo import PPOAgent, PPOConfig
-from repro.core.perf_model import StageTimes, MemoryTerms, predict
 
 
 def main():
@@ -49,42 +45,39 @@ def main():
     print(f"[profile] sample={st.t_sample*1e3:.0f}ms "
           f"batch={st.t_batch*1e3:.0f}ms train={st.t_train*1e3:.0f}ms")
 
-    # ---- phase 2: auto-tune mode/workers/γ under the memory constraint ----
-    sp = Space()
-    iters = max(int(graph.train_mask.sum()) // cfg.batch_size, 1)
-    mt = MemoryTerms(cache_bytes=cfg.cache_volume_mb * 2**20,
-                     batch_bytes=pr.stats.peak_batch_bytes,
-                     model_bytes=30e6, runtime_bytes=64e6)
-
-    def evaluate(knobs):
-        thr, mem = predict(knobs["parallel_mode"], st, mt,
-                           knobs["workers"], iters)
-        acc = 0.75 - 0.01 * np.log(max(knobs["bias_rate"], 1.0))
-        return {"throughput": thr, "memory": mem, "accuracy": acc}
-
+    # ---- phase 2: ONLINE auto-tuning under the memory constraint ----
+    # The controller proposes (γ, Θ, mode, workers) from a PPO burst on a
+    # pre-warmed surrogate, applies each proposal live (drain → reconfigure
+    # → resume) and measures it; infeasible (over-limit) points get the
+    # Algo. 3 -inf reward, so the recommendation respects the budget.
     limit = args.mem_limit_mb * 2**20
-    agent = PPOAgent(sp, evaluate,
-                     w={"throughput": 1e3, "memory": 0, "accuracy": 1.0},
-                     constraint=lambda m: m["memory"] < limit,
-                     cfg=PPOConfig(updates=16, horizon=8, seed=0))
-    best = agent.run()
-    print(f"[autotune] chose mode={best['parallel_mode']} "
-          f"workers={best['workers']} γ={best['bias_rate']:.1f} "
-          f"(predicted mem "
-          f"{evaluate(best)['memory']/2**20:.0f} MiB < {args.mem_limit_mb} MiB)")
+    tr = A3GNNTrainer(graph, cfg, seed=0)
+    report = tr.fit_autotuned(AutotuneConfig(
+        episodes=5, steps_per_episode=8, memory_limit_bytes=limit,
+        max_workers=4, max_bias_rate=8.0, seed=0))
+    best = report.best
+    if not report.best_feasible:
+        print(f"[autotune] WARNING: no measured config fit "
+              f"{args.mem_limit_mb:.0f} MiB — recommending the least-memory "
+              f"point ({best.metrics['memory']/2**20:.0f} MiB)")
+    print(f"[autotune] chose mode={best.config['parallel_mode']} "
+          f"workers={int(best.config['workers'])} "
+          f"γ={best.config['bias_rate']:.1f} "
+          f"Θ={best.config['cache_volume_mb']:.1f}MB "
+          f"(measured mem {best.metrics['memory']/2**20:.0f} MiB, "
+          f"budget {args.mem_limit_mb:.0f} MiB; "
+          f"{len(report.pareto_points())} Pareto points)")
 
-    # ---- phase 3: the real run under the tuned configuration ----
-    tuned = cfg.replace(parallel_mode=best["parallel_mode"],
-                        workers=min(best["workers"], 4),
-                        bias_rate=min(best["bias_rate"], 8.0))
-    tr = A3GNNTrainer(graph, tuned, seed=0)
+    # ---- phase 3: the real run — the trainer already carries the tuned
+    # configuration (parameters/optimizer state survived the episodes) ----
     res = tr.run_epochs(epochs=50, max_steps_per_epoch=max(args.steps // 50, 1))
     print(f"[train] {res.stats.steps} steps, "
           f"loss {res.stats.losses[0]:.3f} → {np.mean(res.stats.losses[-5:]):.3f}, "
           f"thr={res.throughput_steps_s:.2f} steps/s, "
           f"mem={res.memory_bytes/2**20:.0f} MiB, acc={res.test_acc:.3f}, "
           f"hit={res.cache_hit_rate:.2f}")
-    assert res.memory_bytes < limit, "tuner violated the memory constraint"
+    if report.best_feasible:
+        assert res.memory_bytes < limit, "tuner violated the memory constraint"
 
 
 if __name__ == "__main__":

@@ -13,6 +13,41 @@ from repro.configs.base import register
 
 
 @dataclass(frozen=True)
+class AutotuneConfig:
+    """Online auto-tuning (paper §III-C) — episode schedule + objective.
+
+    The controller (core/autotune/controller.py) runs ``episodes`` episodes
+    of ``steps_per_episode`` real training steps each; between episodes it
+    drains the pipeline and applies a new (γ, cache volume, parallel mode,
+    workers) configuration proposed by the PPO policy against the surrogate.
+    The reward is w·(throughput, -memory, accuracy) with a hard
+    ``memory_limit_bytes`` constraint (Algo. 3's -inf reward)."""
+    episodes: int = 4
+    steps_per_episode: int = 10
+    warmup_steps: int = 2            # absorbs jit compiles before episode 0
+    eval_batches: int = 2            # accuracy measurement per episode
+    # surrogate pre-warm (analytic perf/accuracy models → training points)
+    presample: int = 96
+    surrogate_trees: int = 24
+    # objective weights + constraint
+    w_throughput: float = 1.0
+    w_memory: float = 1e-9
+    w_accuracy: float = 0.5
+    memory_limit_bytes: float = float("inf")
+    # PPO exploration burst per episode
+    ppo_updates: int = 3
+    ppo_horizon: int = 8
+    # episode design-space bounds (subset of Table I that is live-swappable)
+    max_workers: int = 4
+    max_cache_mb: float = 64.0
+    max_bias_rate: float = 16.0
+    seed: int = 0
+
+    def replace(self, **kw) -> "AutotuneConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class GNNConfig:
     name: str
     family: str = "gnn"
@@ -39,6 +74,8 @@ class GNNConfig:
     lr: float = 3e-3
     dropout: float = 0.0
     compute_dtype: str = "float32"
+    # online auto-tuning (core/autotune/controller.py)
+    autotune: AutotuneConfig = field(default_factory=AutotuneConfig)
 
     def replace(self, **kw) -> "GNNConfig":
         return replace(self, **kw)

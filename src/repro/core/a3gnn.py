@@ -118,22 +118,11 @@ class A3GNNTrainer:
             if self.cache is not None:
                 self.cache.stats.reset()
         agg: Optional[PipelineStats] = None
-        for ep in range(epochs):
-            stats = pipe.run(mode=exec_mode, max_steps=max_steps_per_epoch,
-                             fail_worker=fail_worker if ep == 0 else None)
-            if agg is None:
-                agg = stats
-            else:
-                agg.steps += stats.steps
-                agg.t_sample += stats.t_sample
-                agg.t_batch += stats.t_batch
-                agg.t_train += stats.t_train
-                agg.t_wall += stats.t_wall
-                agg.losses += stats.losses
-                agg.accs += stats.accs
-                agg.reissued += stats.reissued
-                agg.peak_batch_bytes = max(agg.peak_batch_bytes,
-                                           stats.peak_batch_bytes)
+        try:
+            agg = self._run_pipe_epochs(pipe, exec_mode, epochs,
+                                        max_steps_per_epoch, fail_worker)
+        finally:
+            pipe.shutdown()
         steps_per_epoch = max(
             int(self.graph.train_mask.sum()) // self.cfg.batch_size, 1)
         sps = agg.throughput_steps_per_s()
@@ -157,24 +146,116 @@ class A3GNNTrainer:
             stats=agg, steps_per_epoch=steps_per_epoch)
 
     # ------------------------------------------------------------------
-    def modeled_memory(self, stats: PipelineStats) -> float:
+    @staticmethod
+    def _run_pipe_epochs(pipe: Pipeline, exec_mode: str, epochs: int,
+                         max_steps_per_epoch: Optional[int],
+                         fail_worker: Optional[int]) -> PipelineStats:
+        agg: Optional[PipelineStats] = None
+        for ep in range(epochs):
+            stats = pipe.run(mode=exec_mode, max_steps=max_steps_per_epoch,
+                             fail_worker=fail_worker if ep == 0 else None)
+            if agg is None:
+                agg = stats
+            else:
+                agg.steps += stats.steps
+                agg.t_sample += stats.t_sample
+                agg.t_batch += stats.t_batch
+                agg.t_train += stats.t_train
+                agg.t_wall += stats.t_wall
+                agg.losses += stats.losses
+                agg.accs += stats.accs
+                agg.reissued += stats.reissued
+                agg.peak_batch_bytes = max(agg.peak_batch_bytes,
+                                           stats.peak_batch_bytes)
+        return agg
+
+    # ------------------------------------------------------------------
+    def model_bytes(self, stats: PipelineStats) -> float:
         # |M| of Eq. (3) = params+grads+opt + ACTIVATIONS; activations scale
         # with the deduplicated input-node count (∝ batch bytes) — this is
         # the memory the locality-aware sampler shrinks (§III-A).
         act_factor = max(3.0 * self.cfg.hidden * self.cfg.num_layers
                          / max(self.cfg.feat_dim, 1), 1.0)
         act_bytes = stats.peak_batch_bytes * act_factor
+        return 3 * param_bytes(self.decls) + act_bytes
+
+    @staticmethod
+    def runtime_bytes() -> float:
+        return RUNTIME_BYTES
+
+    def modeled_memory(self, stats: PipelineStats,
+                       mode: Optional[str] = None,
+                       workers: Optional[int] = None) -> float:
         mt = MemoryTerms(
             cache_bytes=self.cache.volume_bytes() if self.cache else 0.0,
             batch_bytes=max(stats.peak_batch_bytes, 1),
-            model_bytes=3 * param_bytes(self.decls) + act_bytes,
+            model_bytes=self.model_bytes(stats),
             runtime_bytes=RUNTIME_BYTES)
-        mode = self.cfg.parallel_mode
+        mode = mode or self.cfg.parallel_mode
+        workers = workers if workers is not None else self.cfg.workers
         if mode == "mode1":
-            return memory_mode1(mt, self.cfg.workers)
+            return memory_mode1(mt, workers)
         if mode == "mode2":
-            return memory_mode2(mt, self.cfg.workers)
+            return memory_mode2(mt, workers)
         return memory_seq(mt)
+
+    # ------------------------------------------------------------------
+    def apply_live_config(self, knobs: Dict, pipe: Optional[Pipeline] = None):
+        """Episode-boundary reconfiguration (autotune controller).
+
+        Applies any of (bias_rate γ, cache_volume_mb Θ, parallel_mode,
+        workers, batch_size) to the live trainer: the cache is resized with
+        its hit/miss accounting intact, the sampler bias weight function is
+        rebuilt for the new γ, and — when ``pipe`` is given — the executor
+        drains and swaps mode/workers without dropping a batch."""
+        updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
+                                         "parallel_mode", "workers",
+                                         "batch_size") if k in knobs}
+        if "workers" in updates:
+            updates["workers"] = int(updates["workers"])
+        if "batch_size" in updates:
+            updates["batch_size"] = int(updates["batch_size"])
+        self.cfg = self.cfg.replace(**updates)
+        if "cache_volume_mb" in updates:
+            vol = float(updates["cache_volume_mb"])
+            if vol <= 0:
+                self.cache = None
+            elif self.cache is None:
+                self.cache = FeatureCache(self.graph, vol,
+                                          self.cfg.cache_policy, self.seed)
+            else:
+                self.cache.resize(vol)
+        if "cache_volume_mb" in updates or "bias_rate" in updates:
+            self.weight_fn = (bias_weight_fn(self.cache, self.cfg.bias_rate)
+                              if (self.cache is not None
+                                  and self.cfg.bias_rate > 1.0) else None)
+        if pipe is not None:
+            pipe.reconfigure(mode=updates.get("parallel_mode"),
+                             workers=updates.get("workers"),
+                             cache=self.cache, weight_fn=self.weight_fn,
+                             batch_size=updates.get("batch_size"))
+
+    # ------------------------------------------------------------------
+    def fit_autotuned(self, autotune=None, seed: Optional[int] = None):
+        """Train under the online auto-tuner (paper §III-C, Algo. 3 live).
+
+        Runs ``autotune.episodes`` PROPOSE → RECONFIGURE → MEASURE →
+        FEEDBACK episodes (see core/autotune/controller.py) on a persistent
+        pipeline and returns the ``AutotuneReport`` — measured Pareto
+        points, per-episode configs/metrics, and the recommendation the
+        trainer is left running."""
+        from repro.core.autotune.controller import AutotuneController
+        acfg = autotune or self.cfg.autotune
+        if seed is not None:
+            acfg = acfg.replace(seed=seed)
+        pipe = Pipeline(self.graph, self.cfg, self._train_fn,
+                        cache=self.cache, weight_fn=self.weight_fn,
+                        seed=self.seed)
+        ctrl = AutotuneController(self, pipe, acfg)
+        try:
+            return ctrl.run()
+        finally:
+            pipe.shutdown()
 
     # ------------------------------------------------------------------
     def evaluate(self, max_batches: int = 8) -> float:

@@ -1,0 +1,323 @@
+"""Online auto-tuning controller — closes the paper's adaptive loop (§III-C).
+
+``AutotuneController`` runs a LIVE ``A3GNNTrainer`` + ``Pipeline`` pair
+through a sequence of tuning *episodes*.  Where the offline tools in this
+package (``ppo.py``, ``surrogate.py``, ``pareto.py``) explore a design
+space against a model, the controller applies each chosen configuration to
+the running trainer and feeds *measured* points back — the
+affordable/adaptive/automatic loop of the paper title.
+
+Episode lifecycle
+-----------------
+
+Each episode ``e = 0, 1, …`` goes through four phases:
+
+1. **PROPOSE** — episode 0 measures the fixed seed configuration (the
+   baseline every later episode must beat).  Episodes ≥ 1 run a short PPO
+   burst (Algo. 3) against the surrogate and take the burst's
+   best-predicted configuration that has not been measured yet, so every
+   episode visits a *new* point of the design space.
+2. **RECONFIGURE** — the pipeline is drained (every in-flight mini-batch is
+   trained; nothing is dropped), then the proposal is applied live:
+   ``FeatureCache.resize`` (hit/miss accounting is preserved), the
+   sampler's bias weight γ is swapped via a fresh ``bias_weight_fn``, and
+   the executor switches parallel mode / worker count.  Training then
+   resumes — parameters, optimizer state and step count all carry over.
+3. **MEASURE** — ``steps_per_episode`` real training steps run under the
+   new configuration.  Throughput is modeled from the *measured* per-stage
+   times via Eqs. 2/4 (the 1-core container cannot physically overlap
+   threads), memory from Eqs. 3/5 with the measured peak batch size, and
+   accuracy from a held-out evaluation.
+4. **FEEDBACK** — the measured (throughput, memory, accuracy) point is
+   appended to the surrogate's training set (which was pre-warmed from the
+   analytic models in ``core/perf_model.py`` + ``core/locality.py``) and
+   the surrogate is refit, so the next episode's proposal sees every real
+   measurement.  The Pareto frontier is maintained over MEASURED points
+   only.
+
+The recommendation (``AutotuneReport.best``) is the measured episode with
+the highest reward ``w·(throughput, −memory, accuracy)`` subject to the
+``memory_limit_bytes`` constraint; ``T*``/``M*`` endpoints come off the
+measured Pareto front exactly as in Tab. II.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.gnn import AutotuneConfig
+from repro.core.autotune.pareto import pareto_front
+from repro.core.autotune.ppo import PPOAgent, PPOConfig, VIOLATION_REWARD
+from repro.core.autotune.space import Knob, Space, MODES
+from repro.core.autotune.surrogate import Surrogate
+from repro.core.locality import accuracy_drop_model, expected_hit_rate
+from repro.core.perf_model import (MemoryTerms, StageTimes,
+                                   bottleneck_step_time, memory_mode1,
+                                   memory_mode2, memory_seq)
+
+# relative cost of a cache hit vs a host fetch during batch generation —
+# scales the analytic t_batch estimate used only for surrogate pre-warming
+HIT_SPEEDUP = 0.6
+
+
+def episode_space(acfg: AutotuneConfig) -> Space:
+    """The live-swappable subset of Table I: knobs that can be applied at an
+    episode boundary without rebuilding the trainer (γ, Θ, mode, workers)."""
+    return Space([
+        Knob("bias_rate", "log", 1.0, acfg.max_bias_rate),
+        Knob("cache_volume_mb", "log", 0.05, acfg.max_cache_mb),
+        Knob("parallel_mode", "cat", choices=MODES),
+        Knob("workers", "int", 1, acfg.max_workers),
+    ])
+
+
+def _cfg_key(cfg: Dict) -> Tuple:
+    return (round(float(cfg["bias_rate"]), 2),
+            round(float(cfg["cache_volume_mb"]), 2),
+            cfg["parallel_mode"], int(cfg["workers"]))
+
+
+@dataclass
+class Episode:
+    index: int
+    config: Dict                    # decoded episode-space knobs
+    metrics: Dict[str, float]       # MEASURED {throughput, memory, accuracy}
+    reward: float
+    cache_hit_rate: float
+    steps: int
+    predicted: Optional[Dict[str, float]] = None   # surrogate view, ep ≥ 1
+
+
+@dataclass
+class AutotuneReport:
+    episodes: List[Episode] = field(default_factory=list)
+    baseline: Optional[Episode] = None
+    best: Optional[Episode] = None
+    best_feasible: bool = True      # False ⇒ EVERY measured episode broke
+                                    # the memory limit; best = least-memory
+
+    @property
+    def baseline_metrics(self) -> Dict[str, float]:
+        return self.baseline.metrics
+
+    @property
+    def final_metrics(self) -> Dict[str, float]:
+        return self.best.metrics
+
+    def changed_knobs(self) -> Dict[str, set]:
+        """Knob → set of distinct values visited across episodes."""
+        out: Dict[str, set] = {}
+        for ep in self.episodes:
+            for k, v in ep.config.items():
+                out.setdefault(k, set()).add(
+                    round(v, 4) if isinstance(v, float) else v)
+        return {k: v for k, v in out.items() if len(v) > 1}
+
+    def pareto_points(self) -> List[Episode]:
+        """Non-dominated measured episodes (throughput↑, memory↓, acc↑)."""
+        if not self.episodes:
+            return []
+        pts = np.array([[e.metrics["throughput"], -e.metrics["memory"],
+                         e.metrics["accuracy"]] for e in self.episodes])
+        return [self.episodes[i] for i in pareto_front(pts)]
+
+
+class AutotuneController:
+    """Drives PROPOSE → RECONFIGURE → MEASURE → FEEDBACK episodes over a
+    live (trainer, pipeline) pair.  See the module docstring."""
+
+    def __init__(self, trainer, pipe, acfg: Optional[AutotuneConfig] = None):
+        self.tr = trainer
+        self.pipe = pipe
+        self.acfg = acfg or trainer.cfg.autotune
+        self.space = episode_space(self.acfg)
+        self.rng = np.random.default_rng(self.acfg.seed)
+        self.surrogate = Surrogate(seed=self.acfg.seed,
+                                   n_trees=self.acfg.surrogate_trees)
+        self._X: List[np.ndarray] = []            # surrogate training set
+        self._Y: Dict[str, List[float]] = {m: [] for m in
+                                           ("throughput", "memory", "accuracy")}
+        self._measured_keys: set = set()
+        self.agent: Optional[PPOAgent] = None
+
+    # -- objective -----------------------------------------------------------
+    def reward(self, metrics: Dict[str, float]) -> float:
+        if not self.feasible(metrics):
+            return VIOLATION_REWARD
+        a = self.acfg
+        return (a.w_throughput * metrics["throughput"]
+                - a.w_memory * metrics["memory"]
+                + a.w_accuracy * metrics["accuracy"])
+
+    def feasible(self, metrics: Dict[str, float]) -> bool:
+        return metrics["memory"] <= self.acfg.memory_limit_bytes
+
+    # -- surrogate pre-warm (analytic models → training points) --------------
+    def prewarm(self, base_stats, base_acc: float):
+        """Seed the surrogate from Eqs. 1-5 before any tuning episode.
+
+        ``base_stats``: PipelineStats of the baseline episode — its measured
+        per-stage times anchor the analytic throughput/memory predictions;
+        ``accuracy_drop_model`` (Eq. 1) anchors accuracy."""
+        st0 = base_stats.stage_times()
+        base_hit = self._hit_model(self._current_config())
+        for u in self.space.sample(self.rng, self.acfg.presample):
+            cfg = self.space.decode(u)
+            m = self._analytic_metrics(cfg, st0, base_hit, base_stats,
+                                       base_acc)
+            self._push_point(self.space.encode(cfg), m)
+        self._refit()
+
+    def _current_config(self) -> Dict:
+        """The trainer's TRUE live knobs (cache_volume_mb may be 0 — a
+        cache-less trainer; clamping to the space bounds happens only at
+        encode time, see ``_encode``)."""
+        c = self.tr.cfg
+        return {"bias_rate": c.bias_rate,
+                "cache_volume_mb": (self.tr.cache.volume_mb
+                                    if self.tr.cache is not None else 0.0),
+                "parallel_mode": self.pipe.mode,
+                "workers": self.pipe.workers_n}
+
+    def _encode(self, cfg: Dict) -> np.ndarray:
+        """Encode for the surrogate, clamping out-of-space values (e.g. the
+        cache-less baseline's Θ=0, or a seed workers count above
+        ``max_workers``) onto the nearest space point."""
+        clamped = dict(cfg)
+        for k in self.space.knobs:
+            if k.kind != "cat":
+                clamped[k.name] = float(np.clip(cfg[k.name], k.lo, k.hi))
+        return self.space.encode(clamped)
+
+    def _hit_model(self, cfg: Dict) -> float:
+        frac = self._cache_frac(cfg["cache_volume_mb"])
+        return expected_hit_rate(frac, cfg["bias_rate"])
+
+    def _cache_frac(self, volume_mb: float) -> float:
+        g = self.tr.graph
+        rows = volume_mb * 2**20 / (g.feat_dim * 4)
+        return min(rows / g.num_nodes, 1.0)
+
+    def _analytic_metrics(self, cfg: Dict, st0: StageTimes, base_hit: float,
+                          base_stats, base_acc: float) -> Dict[str, float]:
+        hit = self._hit_model(cfg)
+        # batch generation is fetch-dominated: hits skip the host copy
+        scale = (1.0 - HIT_SPEEDUP * hit) / max(1.0 - HIT_SPEEDUP * base_hit,
+                                                1e-9)
+        st = StageTimes(st0.t_sample, st0.t_batch * scale, st0.t_train)
+        step_t = bottleneck_step_time(cfg["parallel_mode"], st,
+                                      int(cfg["workers"]))
+        mt = MemoryTerms(
+            cache_bytes=cfg["cache_volume_mb"] * 2**20,
+            batch_bytes=max(base_stats.peak_batch_bytes, 1),
+            model_bytes=self.tr.model_bytes(base_stats),
+            runtime_bytes=self.tr.runtime_bytes())
+        mem = {"seq": memory_seq,
+               "mode1": lambda t: memory_mode1(t, int(cfg["workers"])),
+               "mode2": lambda t: memory_mode2(t, int(cfg["workers"])),
+               }[cfg["parallel_mode"]](mt)
+        drop = accuracy_drop_model(self.tr.eta, cfg["bias_rate"],
+                                   self.tr.graph.density(),
+                                   self._cache_frac(cfg["cache_volume_mb"]))
+        return {"throughput": 1.0 / max(step_t, 1e-9), "memory": float(mem),
+                "accuracy": max(base_acc - drop, 0.0)}
+
+    # -- surrogate bookkeeping ----------------------------------------------
+    def _push_point(self, u: np.ndarray, metrics: Dict[str, float]):
+        self._X.append(np.asarray(u, float))
+        for m in self._Y:
+            self._Y[m].append(float(metrics[m]))
+
+    def _refit(self):
+        X = np.stack(self._X)
+        self.surrogate.fit(X, {m: np.asarray(v) for m, v in self._Y.items()})
+
+    def _surrogate_eval(self, cfg: Dict) -> Dict[str, float]:
+        pred = self.surrogate.predict(self.space.encode(cfg)[None])
+        return {m: float(v[0]) for m, v in pred.items()}
+
+    # -- PROPOSE -------------------------------------------------------------
+    def propose(self) -> Tuple[Dict, Dict]:
+        """PPO burst on the surrogate → best not-yet-measured config."""
+        if self.agent is None:
+            self.agent = PPOAgent(
+                self.space, self._surrogate_eval,
+                {"throughput": self.acfg.w_throughput,
+                 "memory": self.acfg.w_memory,
+                 "accuracy": self.acfg.w_accuracy},
+                self.feasible,
+                PPOConfig(updates=self.acfg.ppo_updates,
+                          horizon=self.acfg.ppo_horizon,
+                          seed=self.acfg.seed))
+        start = len(self.agent.history)
+        self.agent.run(self.rng)
+        burst = self.agent.history[start:]
+        ranked = sorted(burst, key=lambda h: h[2], reverse=True)
+        for cfg, pred, _ in ranked:
+            if _cfg_key(cfg) not in self._measured_keys:
+                return cfg, pred
+        # every burst point already measured — jitter to a fresh one
+        for _ in range(64):
+            cfg = self.space.decode(self.space.sample(self.rng)[0])
+            if _cfg_key(cfg) not in self._measured_keys:
+                return cfg, self._surrogate_eval(cfg)
+        return ranked[0][0], ranked[0][1]
+
+    # -- MEASURE -------------------------------------------------------------
+    def measure(self, index: int, cfg: Dict,
+                predicted: Optional[Dict] = None) -> Episode:
+        if self.tr.cache is not None:
+            self.tr.cache.stats.reset()
+        stats = self.pipe.run(max_steps=self.acfg.steps_per_episode)
+        st = stats.stage_times()
+        step_t = bottleneck_step_time(self.pipe.mode, st, self.pipe.workers_n)
+        metrics = {
+            "throughput": 1.0 / max(step_t, 1e-9),
+            "memory": self.tr.modeled_memory(stats, mode=self.pipe.mode,
+                                             workers=self.pipe.workers_n),
+            "accuracy": self.tr.evaluate(max_batches=self.acfg.eval_batches),
+        }
+        ep = Episode(index=index, config=dict(cfg), metrics=metrics,
+                     reward=self.reward(metrics),
+                     cache_hit_rate=(self.tr.cache.stats.hit_rate
+                                     if self.tr.cache else 0.0),
+                     steps=stats.steps, predicted=predicted)
+        self._measured_keys.add(_cfg_key(cfg))
+        self._push_point(self._encode(cfg), metrics)        # FEEDBACK
+        self._refit()
+        return ep
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> AutotuneReport:
+        report = AutotuneReport()
+        acfg = self.acfg
+        if acfg.warmup_steps:
+            self.pipe.run(mode="seq", max_steps=acfg.warmup_steps)
+            self.pipe.reconfigure(mode=self.tr.cfg.parallel_mode)
+        # episode 0: the fixed seed configuration = the baseline
+        base_cfg = self._current_config()
+        base = self.measure(0, base_cfg)
+        report.episodes.append(base)
+        report.baseline = base
+        self.prewarm(self.pipe.stats, base.metrics["accuracy"])
+        for e in range(1, acfg.episodes):
+            cfg, pred = self.propose()
+            self.tr.apply_live_config(cfg, self.pipe)       # RECONFIGURE
+            report.episodes.append(self.measure(e, cfg, predicted=pred))
+        feasible = [ep for ep in report.episodes
+                    if self.feasible(ep.metrics)]
+        if feasible:
+            report.best = max(feasible, key=lambda ep: ep.reward)
+        else:
+            # nothing fit the budget — recommend the least-memory point and
+            # flag it, rather than an arbitrary VIOLATION_REWARD tie-winner
+            report.best = min(report.episodes,
+                              key=lambda ep: ep.metrics["memory"])
+            report.best_feasible = False
+        # leave the trainer running the recommended configuration
+        if _cfg_key(report.best.config) != _cfg_key(self._current_config()):
+            self.tr.apply_live_config(report.best.config, self.pipe)
+        return report

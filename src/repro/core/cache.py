@@ -47,19 +47,54 @@ class FeatureCache:
                  seed: int = 0):
         self.g = graph
         self.policy = policy
+        self.stats = CacheStats()
+        self._alloc(volume_mb)
+
+    def _alloc(self, volume_mb: float):
+        """(Re)allocate storage for ``volume_mb`` and warm it per policy.
+        ``self.stats`` is untouched — hit/miss accounting survives resizes."""
+        graph = self.g
+        self.volume_mb = float(volume_mb)
         row_bytes = graph.feat_dim * 4
         self.capacity = max(int(volume_mb * 2**20 / row_bytes), 0)
         self.capacity = min(self.capacity, graph.num_nodes)
         self.device_map = -np.ones(graph.num_nodes, dtype=np.int32)
         self.storage = np.zeros((self.capacity, graph.feat_dim), np.float32)
         self.slot_owner = -np.ones(self.capacity, dtype=np.int64)
-        self.stats = CacheStats()
         self._fifo_head = 0
-        if policy == "static" and self.capacity:
+        if self.policy == "static" and self.capacity:
             hot = graph.hotness_order()[:self.capacity]
             self.storage[:len(hot)] = graph.features[hot]
             self.device_map[hot] = np.arange(len(hot), dtype=np.int32)
             self.slot_owner[:len(hot)] = hot
+
+    def resize(self, volume_mb: float, keep_residents: bool = True):
+        """Episode-boundary reconfiguration (autotune controller).
+
+        Static policy re-warms from the hotness order at the new capacity.
+        FIFO keeps the most-recently-inserted residents that still fit
+        (``keep_residents``), so a shrink behaves like ``new_cap``
+        evictions, not a cold restart.  Cumulative ``stats`` are preserved
+        either way — the controller's measured hit rate spans episodes via
+        ``stats.reset()`` at the boundary it chooses, not here.
+        """
+        if self.policy != "fifo" or not keep_residents:
+            self._alloc(volume_mb)
+            return
+        # FIFO: snapshot residents in insertion order (oldest → newest)
+        old_cap, head = self.capacity, self._fifo_head
+        order = (np.arange(old_cap) + head) % old_cap if old_cap else \
+            np.arange(0)
+        residents = self.slot_owner[order]
+        residents = residents[residents >= 0]
+        self._alloc(volume_mb)
+        if self.capacity and len(residents):
+            keep = residents[-self.capacity:]
+            n = len(keep)
+            self.slot_owner[:n] = keep
+            self.device_map[keep] = np.arange(n, dtype=np.int32)
+            self.storage[:n] = self.g.features[keep]
+            self._fifo_head = n % self.capacity
 
     # -- lookups ------------------------------------------------------------
     def is_cached(self, ids: np.ndarray) -> np.ndarray:

@@ -13,8 +13,20 @@ Three executors over the Algo.-1 stages (sample → batch-generate → train):
 On the host-TPU adaptation workers are threads (numpy sampling releases the
 GIL in the hot gather ops) and the bounded queue doubles as the
 double-buffer: while the device runs step k, workers prepare k+1.  Worker
-failures are tolerated: a heartbeat thread re-issues the failed seed batch
+failures are tolerated: a failed seed batch is re-issued on a spare sampler
 (fault_tolerance.py provides the same machinery for the LM trainer).
+
+The executor is RECONFIGURABLE at an episode boundary (the autotune
+controller's drain → reconfigure → resume contract):
+
+  * ``submit()`` / ``step()`` — producer/consumer decoupled; in-flight work
+    is tracked so nothing is ever dropped.
+  * ``drain()`` — consume (train on) every submitted-but-unconsumed batch.
+  * ``reconfigure()`` — drain, then atomically swap any of (mode, workers,
+    cache, weight_fn, batch_size); the worker pool is rebuilt lazily with
+    the new sampler bias/cache on the next submit.
+  * ``run()`` — the classic one-epoch entry point, now submit+drain on the
+    persistent pool; ``shutdown()`` releases the worker threads.
 """
 from __future__ import annotations
 
@@ -30,6 +42,8 @@ import numpy as np
 from repro.core.cache import FeatureCache
 from repro.core.sampling import NeighborSampler, MiniBatch, seed_loader
 from repro.graph.batch import generate_batch, batch_device_arrays, batch_bytes
+
+_UNSET = object()
 
 
 @dataclass
@@ -55,15 +69,18 @@ class PipelineStats:
 
 
 class _SampleWorker(threading.Thread):
-    """Pulls seed batches from an index queue, produces (mini)batches."""
+    """Pulls seed batches from an index queue, produces (mini)batches.
 
-    def __init__(self, wid, sampler, cache, graph, in_q, out_q, stats_lock,
-                 stats, do_batchgen, heartbeat, fail_after=None):
+    Stats are written into ``pipeline.stats`` (re-read on every item, so an
+    episode-boundary ``begin_stats()`` swap takes effect immediately)."""
+
+    def __init__(self, wid, sampler, pipeline, in_q, out_q, do_batchgen,
+                 heartbeat, fail_after=None):
         super().__init__(daemon=True)
         self.wid = wid
-        self.sampler, self.cache, self.graph = sampler, cache, graph
+        self.sampler = sampler
+        self.pipe = pipeline
         self.in_q, self.out_q = in_q, out_q
-        self.stats_lock, self.stats = stats_lock, stats
         self.do_batchgen = do_batchgen
         self.heartbeat = heartbeat
         self.fail_after = fail_after        # fault-injection for tests
@@ -83,11 +100,11 @@ class _SampleWorker(threading.Thread):
                 mb = self.sampler.sample(seeds)
                 t1 = time.perf_counter()
                 if self.do_batchgen:
-                    mb = generate_batch(mb, self.cache, self.graph)
+                    mb = generate_batch(mb, self.pipe.cache, self.pipe.graph)
                 t2 = time.perf_counter()
-                with self.stats_lock:
-                    self.stats.t_sample += t1 - t0
-                    self.stats.t_batch += t2 - t1
+                with self.pipe._lock:
+                    self.pipe.stats.t_sample += t1 - t0
+                    self.pipe.stats.t_batch += t2 - t1
                 self.heartbeat[self.wid] = time.time()
                 self._count += 1
                 self.out_q.put((idx, seeds, mb))
@@ -99,7 +116,7 @@ class _SampleWorker(threading.Thread):
 
 
 class Pipeline:
-    """Executes one epoch (or ``max_steps``) under a given mode."""
+    """Persistent, reconfigurable executor over the Algo.-1 stages."""
 
     def __init__(self, graph, cfg, train_fn: Callable[[MiniBatch], tuple],
                  cache: Optional[FeatureCache] = None,
@@ -109,104 +126,221 @@ class Pipeline:
         self.cache = cache
         self.weight_fn = weight_fn
         self.seed = seed
+        self.mode = cfg.parallel_mode
+        self.workers_n = max(cfg.workers, 1)
+        self.batch_size = cfg.batch_size
+        self.stats = PipelineStats()
+        self._lock = threading.Lock()
+        self.heartbeat: Dict[int, float] = {}
+        # pool state
+        self._workers: List[_SampleWorker] = []
+        self._in_q: Optional[queue.Queue] = None
+        self._out_q: Optional[queue.Queue] = None
+        self._pool_key = None                  # (do_batchgen, n) of live pool
+        self._submit_idx = 0
+        self._inflight = 0                     # parallel: submitted, unconsumed
+        self._pending: List[np.ndarray] = []   # seq: submitted, unconsumed
+        self._spare: Optional[NeighborSampler] = None
+        self._seq_sampler: Optional[NeighborSampler] = None
+        self._pool_transient = False
+        self._epoch = 0                        # advances the seed shuffle
 
     def _make_sampler(self, s=0):
         return NeighborSampler(self.graph, self.cfg.fanout,
                                weight_fn=self.weight_fn, seed=self.seed + s)
 
-    # ------------------------------------------------------------------
-    def run(self, mode: Optional[str] = None, max_steps: Optional[int] = None,
-            fail_worker: Optional[int] = None) -> PipelineStats:
-        mode = mode or self.cfg.parallel_mode
-        if mode == "seq":
-            return self._run_seq(max_steps)
-        return self._run_parallel(mode, max_steps, fail_worker)
+    # -- stats windows -------------------------------------------------------
+    def begin_stats(self) -> PipelineStats:
+        """Open a fresh measurement window (e.g. one autotune episode)."""
+        with self._lock:
+            self.stats = PipelineStats()
+            return self.stats
 
-    # ------------------------------------------------------------------
-    def _run_seq(self, max_steps) -> PipelineStats:
-        stats = PipelineStats()
-        sampler = self._make_sampler()
-        t_start = time.perf_counter()
-        for seeds in seed_loader(self.graph, self.cfg.batch_size, self.seed):
-            if max_steps is not None and stats.steps >= max_steps:
-                break
+    # -- worker pool ---------------------------------------------------------
+    def _start_pool(self, do_batchgen: bool, fail_worker=None):
+        n = self.workers_n
+        self._in_q = queue.Queue()
+        self._out_q = queue.Queue(maxsize=2 * n)   # bounded double-buffer
+        self._workers = []
+        for w in range(n):
+            fa = 2 if (fail_worker is not None and w == fail_worker) else None
+            wk = _SampleWorker(w, self._make_sampler(w), self,
+                               self._in_q, self._out_q, do_batchgen,
+                               self.heartbeat, fail_after=fa)
+            wk.start()
+            self._workers.append(wk)
+        self._pool_key = (do_batchgen, n)
+        self._pool_transient = fail_worker is not None
+
+    def _stop_pool(self):
+        if self._workers:
+            for _ in self._workers:
+                self._in_q.put(None)
+            for wk in self._workers:
+                wk.join(timeout=5)
+        self._workers = []
+        self._in_q = self._out_q = None
+        self._pool_key = None
+        self._pool_transient = False
+
+    def _ensure_pool(self, mode: str, fail_worker=None):
+        do_batchgen = (mode == "mode1")
+        want = (do_batchgen, self.workers_n)
+        if (fail_worker is not None or self._pool_key != want
+                or self._pool_transient):
+            if self._inflight:
+                self.drain()       # never discard queued work on a rebuild
+            self._stop_pool()
+            self._start_pool(do_batchgen, fail_worker)
+
+    # -- produce / consume ---------------------------------------------------
+    def submit(self, seed_batches, fail_worker=None):
+        """Queue seed batches for execution under the CURRENT mode."""
+        if self.mode == "seq":
+            self._pending.extend(seed_batches)
+            return
+        self._ensure_pool(self.mode, fail_worker)
+        for seeds in seed_batches:
+            self._in_q.put((self._submit_idx, seeds))
+            self._submit_idx += 1
+            self._inflight += 1
+
+    @property
+    def inflight(self) -> int:
+        return len(self._pending) + self._inflight
+
+    def step(self) -> bool:
+        """Consume (train on) exactly one submitted batch.  Returns False if
+        nothing is in flight."""
+        if self.mode == "seq" or self._pending:
+            if not self._pending:
+                return False
+            seeds = self._pending.pop(0)
+            if self._seq_sampler is None:
+                self._seq_sampler = self._make_sampler()
             t0 = time.perf_counter()
-            mb = sampler.sample(seeds)
+            mb = self._seq_sampler.sample(seeds)
             t1 = time.perf_counter()
             mb = generate_batch(mb, self.cache, self.graph)
             t2 = time.perf_counter()
             loss, acc = self.train_fn(mb)
             t3 = time.perf_counter()
-            stats.t_sample += t1 - t0
-            stats.t_batch += t2 - t1
-            stats.t_train += t3 - t2
-            stats.steps += 1
-            stats.losses.append(float(loss))
-            stats.accs.append(float(acc))
-            stats.peak_batch_bytes = max(stats.peak_batch_bytes, batch_bytes(mb))
-        stats.t_wall = time.perf_counter() - t_start
-        return stats
+            with self._lock:
+                st = self.stats
+                st.t_sample += t1 - t0
+                st.t_batch += t2 - t1
+                self._record_train(st, mb, loss, acc, t3 - t2)
+            return True
+        if self._inflight == 0:
+            return False
+        do_batchgen = self._pool_key[0] if self._pool_key else True
+        idx, seeds, mb = self._out_q.get()
+        self._inflight -= 1
+        with self._lock:
+            self.stats.queue_peak = max(self.stats.queue_peak,
+                                        self._out_q.qsize())
+        if mb is None:                                 # failed worker → re-issue
+            if self._spare is None:
+                self._spare = self._make_sampler(997)  # straggler/failure spare
+            t0 = time.perf_counter()
+            mb = self._spare.sample(seeds)
+            mb = generate_batch(mb, self.cache, self.graph)
+            with self._lock:
+                self.stats.reissued += 1
+                self.stats.t_sample += time.perf_counter() - t0
+        elif not do_batchgen:                          # mode2: serialize batchgen
+            t0 = time.perf_counter()
+            mb = generate_batch(mb, self.cache, self.graph)
+            with self._lock:
+                self.stats.t_batch += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loss, acc = self.train_fn(mb)
+        t1 = time.perf_counter()
+        with self._lock:
+            self._record_train(self.stats, mb, loss, acc, t1 - t0)
+        return True
 
-    # ------------------------------------------------------------------
-    def _run_parallel(self, mode: str, max_steps, fail_worker) -> PipelineStats:
-        n = max(self.cfg.workers, 1)
-        stats = PipelineStats()
-        lock = threading.Lock()
-        in_q: queue.Queue = queue.Queue()
-        out_q: queue.Queue = queue.Queue(maxsize=2 * n)   # bounded double-buffer
-        heartbeat: Dict[int, float] = {}
-        do_batchgen = (mode == "mode1")
+    def _record_train(self, st: PipelineStats, mb, loss, acc, dt: float):
+        st.t_train += dt
+        st.steps += 1
+        st.losses.append(float(loss))
+        st.accs.append(float(acc))
+        st.peak_batch_bytes = max(st.peak_batch_bytes, batch_bytes(mb))
 
-        workers = []
-        for w in range(n):
-            fa = None
-            if fail_worker is not None and w == fail_worker:
-                fa = 2                                     # fail after 2 batches
-            wk = _SampleWorker(w, self._make_sampler(w), self.cache, self.graph,
-                               in_q, out_q, lock, stats, do_batchgen,
-                               heartbeat, fail_after=fa)
-            wk.start()
-            workers.append(wk)
+    def drain(self):
+        """Consume every in-flight batch (nothing is dropped)."""
+        while self.step():
+            pass
 
-        seed_batches = list(seed_loader(self.graph, self.cfg.batch_size,
-                                        self.seed))
+    # -- reconfiguration -----------------------------------------------------
+    def reconfigure(self, mode: Optional[str] = None,
+                    workers: Optional[int] = None,
+                    cache: Any = _UNSET, weight_fn: Any = _UNSET,
+                    batch_size: Optional[int] = None):
+        """Drain → swap knobs → (lazy) resume.
+
+        Safe at any point: all in-flight batches are trained under the OLD
+        configuration first, then the pool is torn down so the next submit
+        rebuilds samplers with the new bias/cache."""
+        self.drain()
+        self._stop_pool()
+        self._spare = None
+        self._seq_sampler = None
+        if mode is not None:
+            self.mode = mode
+        if workers is not None:
+            self.workers_n = max(int(workers), 1)
+        if cache is not _UNSET:
+            self.cache = cache
+        if weight_fn is not _UNSET:
+            self.weight_fn = weight_fn
+        if batch_size is not None:
+            self.batch_size = int(batch_size)
+
+    def shutdown(self):
+        """Discard pending work and stop the workers.
+
+        Unlike ``reconfigure`` this does NOT train the backlog: shutdown is
+        called from ``finally`` blocks during exception unwind, where
+        re-entering ``train_fn`` would mask the original error (or continue
+        training after a fault).  Callers on the green path have already
+        drained — ``run()`` consumes everything it submits."""
+        self._pending.clear()
+        self._inflight = 0
+        # unblock any worker parked on a full out_q, and pull undispatched
+        # items so the stop sentinels are consumed promptly
+        for q_ in (self._out_q, self._in_q):
+            if q_ is None:
+                continue
+            while True:
+                try:
+                    q_.get_nowait()
+                except queue.Empty:
+                    break
+        self._stop_pool()
+
+    # -- classic one-epoch entry point --------------------------------------
+    def run(self, mode: Optional[str] = None, max_steps: Optional[int] = None,
+            fail_worker: Optional[int] = None) -> PipelineStats:
+        if mode is not None and mode != self.mode:
+            self.reconfigure(mode=mode)
+        stats = self.begin_stats()
+        # each run window gets a fresh shuffle — autotune episodes must not
+        # re-measure the identical batch prefix (a FIFO cache would look
+        # steady-state-optimal on repeats)
+        seed_batches = list(seed_loader(self.graph, self.batch_size,
+                                        self.seed + self._epoch))
+        self._epoch += 1
         if max_steps is not None:
             seed_batches = seed_batches[:max_steps]
-        for i, seeds in enumerate(seed_batches):
-            in_q.put((i, seeds))
-
-        spare = self._make_sampler(997)                    # straggler/failure spare
         t_start = time.perf_counter()
-        done = 0
-        while done < len(seed_batches):
-            idx, seeds, mb = out_q.get()
-            stats.queue_peak = max(stats.queue_peak, out_q.qsize())
-            if mb is None:                                 # failed worker → re-issue
-                stats.reissued += 1
-                t0 = time.perf_counter()
-                mb = spare.sample(seeds)
-                mb = generate_batch(mb, self.cache, self.graph)
-                with lock:
-                    stats.t_sample += time.perf_counter() - t0
-            elif not do_batchgen:                          # mode2: serialize batchgen
-                t0 = time.perf_counter()
-                mb = generate_batch(mb, self.cache, self.graph)
-                with lock:
-                    stats.t_batch += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            loss, acc = self.train_fn(mb)
-            t1 = time.perf_counter()
-            with lock:
-                stats.t_train += t1 - t0
-                stats.steps += 1
-                stats.losses.append(float(loss))
-                stats.accs.append(float(acc))
-                stats.peak_batch_bytes = max(stats.peak_batch_bytes,
-                                             batch_bytes(mb))
-            done += 1
+        if self.mode == "seq":
+            self.submit(seed_batches)
+            self.drain()
+        else:
+            self.submit(seed_batches, fail_worker=fail_worker)
+            self.drain()
+            if fail_worker is not None:
+                self._stop_pool()      # injected-failure pool is poisoned
         stats.t_wall = time.perf_counter() - t_start
-        for _ in workers:
-            in_q.put(None)
-        for wk in workers:
-            wk.join(timeout=5)
         return stats

@@ -31,10 +31,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(kv_i, carry):
         m_i, l_i, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kv_i * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kv_i * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        # direct ref indexing (pl.load rejects plain-int axes on some
+        # jax versions; ref.__getitem__ normalizes them)
+        k = k_ref[0, pl.dslice(kv_i * block_k, block_k),
+                  slice(None)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kv_i * block_k, block_k),
+                  slice(None)].astype(jnp.float32)
         s = q @ k.T                                      # (Bq, Bk)
         if causal:
             kv_pos = kv_i * block_k + jax.lax.broadcasted_iota(

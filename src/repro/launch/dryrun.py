@@ -43,6 +43,7 @@ from repro.models.unroll import force_unroll
 from repro.distributed.sharding import (physical_specs, shardings_of, make_rules,
                                         resolve_spec, shard_ctx, enforce_divisible)
 from repro.launch.mesh import make_production_mesh, HW
+from repro.launch.xla_compat import cost_analysis_dict
 from repro.train.trainer import make_train_step
 from repro.train.optimizer import get_optimizer
 
@@ -166,7 +167,7 @@ def _probe_costs(cfg, shape, mesh):
     with shard_ctx(cfg, mesh), force_unroll(True):
         lowered, _ = _lower_cell(cfg, shape, mesh)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     per_op, coll_total = parse_collectives(compiled.as_text())
     out = {
         "flops": float(ca.get("flops", 0.0)),
@@ -204,7 +205,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca_raw = compiled.cost_analysis() or {}
+    ca_raw = cost_analysis_dict(compiled)
 
     # ---- cost probes: reduced depth, fully unrolled ----
     (cfg1, u1), (cfg2, u2), uf = depth_probe_cfgs(cfg)

@@ -14,6 +14,8 @@ Two workloads behind one CLI:
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch graphsage-products --steps 30
+  PYTHONPATH=src python -m repro.launch.train --arch graphsage-products \
+      --smoke --autotune --episodes-autotune 4
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke --steps 10
 """
 from __future__ import annotations
@@ -48,6 +50,27 @@ def run_gnn(args):
     print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
           f"{graph.num_edges} edges")
     tr = A3GNNTrainer(graph, cfg, seed=args.seed)
+    if args.autotune:
+        acfg = cfg.autotune.replace(episodes=args.episodes_autotune,
+                                    steps_per_episode=args.steps,
+                                    seed=args.seed)
+        rep = tr.fit_autotuned(acfg)
+        for ep in rep.episodes:
+            c, m = ep.config, ep.metrics
+            print(f"[episode {ep.index}] γ={c['bias_rate']:.2f} "
+                  f"Θ={c['cache_volume_mb']:.2f}MB "
+                  f"mode={c['parallel_mode']} workers={int(c['workers'])} | "
+                  f"thr={m['throughput']:.2f} steps/s "
+                  f"mem={m['memory']/2**20:.1f} MiB acc={m['accuracy']:.3f} "
+                  f"hit={ep.cache_hit_rate:.2f}")
+        b, m = rep.best, rep.best.metrics
+        print(f"[autotune] best=episode {b.index} "
+              f"thr={m['throughput']:.2f} steps/s "
+              f"(baseline {rep.baseline_metrics['throughput']:.2f}) "
+              f"changed={sorted(rep.changed_knobs())}")
+        print(f"[pareto] {len(rep.pareto_points())} non-dominated "
+              f"measured points")
+        return 0
     res = tr.run_epochs(args.epochs, max_steps_per_epoch=args.steps)
     print(f"[result] thr={res.throughput_epochs_s:.4f} ep/s "
           f"({res.throughput_steps_s:.2f} steps/s) "
@@ -122,6 +145,9 @@ def main():
     ap.add_argument("--mode", default=None,
                     choices=[None, "seq", "mode1", "mode2"])
     ap.add_argument("--bias-rate", type=float, default=None)
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the online auto-tuning controller (§III-C)")
+    ap.add_argument("--episodes-autotune", type=int, default=4)
     # LM knobs
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

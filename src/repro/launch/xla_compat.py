@@ -1,0 +1,22 @@
+"""Version-compat helpers around XLA's AOT introspection APIs.
+
+Side-effect free on import (unlike launch/dryrun.py, which forces 512 host
+devices) — safe to import from tests and subprocesses that control their
+own device count.
+"""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``.
+
+    jax ≤0.4.x returns a one-element list of per-program dicts; newer
+    releases return the dict directly (and may return None when the backend
+    provides no analysis).  Downstream cost code always wants a flat dict.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if len(ca) else {}
+    return dict(ca)

@@ -33,8 +33,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _flatten_with_path(tree):
+    # jax.tree.flatten_with_path only exists from jax 0.4.x+ (0.6 moved it
+    # onto jax.tree); fall back to the stable tree_util spelling.
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree)
+
+
 def _flatten_with_names(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = _flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -66,7 +75,12 @@ class CheckpointManager:
                 target=self._write, args=(step, host_state, extra), daemon=True)
             self._thread.start()
         else:
+            # synchronous save: surface writer errors immediately instead of
+            # parking them for a wait() that may never come
             self._write(step, host_state, extra)
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
 
     def wait(self):
         if self._thread is not None:
@@ -81,6 +95,9 @@ class CheckpointManager:
         try:
             final = self.dir / f"step_{step:09d}"
             tmp = self.dir / f".tmp_step_{step:09d}"
+            # the target dir may not exist yet on first save (or may have
+            # been removed between construction and save)
+            self.dir.mkdir(parents=True, exist_ok=True)
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)

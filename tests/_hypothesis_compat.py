@@ -1,0 +1,115 @@
+"""Optional-``hypothesis`` shim for property-based tests.
+
+``hypothesis`` is an *optional* test extra (install with
+``pip install hypothesis`` — see scripts/ci.sh).  When it is available the
+real library is re-exported unchanged.  When it is missing, a deterministic
+fixed-case fallback stands in: ``@given`` re-runs the test body over a
+seeded sweep of drawn examples (seeded from the test name, so runs are
+reproducible and failures are reportable as a concrete example index).
+
+The fallback implements only the strategy surface this suite uses:
+``st.integers``, ``st.floats``, ``st.booleans``, ``st.sampled_from`` and
+``st.lists``.  It intentionally does no shrinking — it is a smoke-grade
+stand-in, not a replacement; CI with the extra installed gets the real
+search.
+
+Usage (drop-in)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 12     # cap the fixed-case sweep (speed)
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """Deterministic stand-ins for the strategies this suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples=None, **_kw):
+        """Records max_examples for ``given`` to pick up; other hypothesis
+        settings (deadline, ...) are meaningless here and ignored."""
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples",
+                            _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES)
+            # Like hypothesis, positional strategies fill the test's LAST
+            # positional parameters; everything is passed by keyword.
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            pos_names = names[len(names) - len(arg_strategies):] \
+                if arg_strategies else []
+            strat_map = dict(zip(pos_names, arg_strategies))
+            strat_map.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strat_map.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"fallback example {i}/{n} ({drawn}) "
+                            f"failed: {e}") from e
+            # hide drawn params so pytest doesn't resolve them as fixtures
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strat_map])
+            return wrapper
+        return deco

@@ -12,6 +12,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long pipeline/system tests — excluded from the fast lane "
+        "(scripts/ci.sh runs them in the full tier-1 pass)")
+
+
 @pytest.fixture(scope="session")
 def smoke_graph():
     from repro.configs.gnn import gnn_config

@@ -1,7 +1,7 @@
 """Auto-tuning: design space, surrogate R², PPO vs grid, Pareto props."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.autotune.space import Space, design_space
 from repro.core.autotune.surrogate import Surrogate, GBDT, Ridge, r2_score

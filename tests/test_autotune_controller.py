@@ -1,0 +1,282 @@
+"""Online auto-tuning controller: episode-boundary reconfiguration
+(drain → reconfigure → resume), measured-Pareto properties, and the
+closed-loop acceptance run (fit_autotuned beats the fixed seed config)."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.gnn import AutotuneConfig, gnn_config
+from repro.core.a3gnn import A3GNNTrainer
+from repro.core.autotune.controller import (AutotuneController,
+                                            AutotuneReport, Episode,
+                                            episode_space)
+from repro.core.cache import FeatureCache
+from repro.core.locality import bias_weight_fn
+from repro.core.pipeline import Pipeline
+from repro.core.sampling import seed_loader
+
+
+# ---------------------------------------------------------------------------
+# episode-boundary reconfiguration
+# ---------------------------------------------------------------------------
+
+def test_cache_resize_preserves_hit_accounting(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.05, policy="static")
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, smoke_graph.num_nodes, 400)
+    c.fetch(ids)
+    stats_before = (c.stats.hits, c.stats.misses, c.stats.bytes_from_cache,
+                    c.stats.bytes_from_host)
+    assert c.stats.hits + c.stats.misses == 400
+    stats_obj = c.stats
+
+    cap_before = c.capacity
+    c.resize(0.1)                       # grow
+    assert c.capacity > cap_before
+    assert c.stats is stats_obj         # same accounting object
+    assert (c.stats.hits, c.stats.misses, c.stats.bytes_from_cache,
+            c.stats.bytes_from_host) == stats_before
+    # still serves correct features, and accounting keeps accruing
+    np.testing.assert_allclose(c.fetch(ids[:50]),
+                               smoke_graph.features[ids[:50]])
+    assert c.stats.hits + c.stats.misses == 450
+
+    c.resize(0.02)                      # shrink below the original
+    assert 0 < c.capacity < cap_before
+    # device_map and slot_owner stay mutually consistent after resize
+    cached = np.where(c.device_map >= 0)[0]
+    assert len(cached) == c.capacity
+    assert (c.slot_owner[c.device_map[cached]] == cached).all()
+
+
+def test_fifo_resize_keeps_newest_residents(smoke_graph):
+    c = FeatureCache(smoke_graph, volume_mb=0.05, policy="fifo")
+    c.fetch(np.arange(c.capacity * 2))          # fill + wrap
+    newest = c.slot_owner[c.slot_owner >= 0]
+    c.resize(0.02)
+    survivors = c.slot_owner[c.slot_owner >= 0]
+    assert len(survivors) == c.capacity
+    assert set(survivors) <= set(newest)        # no resurrected evictees
+    np.testing.assert_allclose(c.fetch(survivors),
+                               smoke_graph.features[survivors])
+
+
+def test_gamma_swap_changes_reservoir_weights(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg.replace(bias_rate=2.0),
+                      seed=0)
+    cached = np.where(tr.cache.device_map >= 0)[0][:16]
+    uncached = np.where(tr.cache.device_map < 0)[0][:16]
+    np.testing.assert_allclose(tr.weight_fn(cached), 2.0)
+    np.testing.assert_allclose(tr.weight_fn(uncached), 1.0)
+
+    tr.apply_live_config({"bias_rate": 8.0})
+    assert tr.cfg.bias_rate == 8.0
+    np.testing.assert_allclose(tr.weight_fn(cached), 8.0)
+    np.testing.assert_allclose(tr.weight_fn(uncached), 1.0)
+
+    tr.apply_live_config({"bias_rate": 1.0})    # γ=1 → uniform sampling
+    assert tr.weight_fn is None
+
+
+def test_mode_switch_drains_queue_without_dropping(smoke_graph,
+                                                   smoke_gnn_cfg):
+    cfg = smoke_gnn_cfg.replace(parallel_mode="mode1", workers=2)
+    tr = A3GNNTrainer(smoke_graph, cfg, seed=0)
+    pipe = Pipeline(smoke_graph, cfg, tr._train_fn, cache=tr.cache,
+                    weight_fn=tr.weight_fn, seed=0)
+    try:
+        batches = list(seed_loader(smoke_graph, cfg.batch_size, 0))[:8]
+        pipe.begin_stats()
+        pipe.submit(batches)
+        # consume a few, then switch modes with work still in flight
+        for _ in range(3):
+            assert pipe.step()
+        assert pipe.inflight == 5
+        pipe.reconfigure(mode="mode2")          # drain → swap → resume
+        assert pipe.inflight == 0
+        assert pipe.stats.steps == 8            # nothing dropped
+        assert pipe.mode == "mode2"
+        # resumed execution under the new mode still works
+        pipe.submit(batches[:2])
+        pipe.drain()
+        assert pipe.stats.steps == 10
+    finally:
+        pipe.shutdown()
+
+
+def test_reconfigure_swaps_gamma_and_cache_live(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    pipe = Pipeline(smoke_graph, tr.cfg, tr._train_fn, cache=tr.cache,
+                    weight_fn=tr.weight_fn, seed=0)
+    try:
+        old_cache = tr.cache
+        tr.apply_live_config({"bias_rate": 8.0, "cache_volume_mb": 0.5,
+                              "parallel_mode": "mode2", "workers": 3}, pipe)
+        assert tr.cache is old_cache            # resized, not rebuilt
+        assert pipe.cache is tr.cache
+        assert pipe.weight_fn is tr.weight_fn
+        assert pipe.mode == "mode2" and pipe.workers_n == 3
+        stats = pipe.run(max_steps=3)
+        assert stats.steps == 3
+    finally:
+        pipe.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Pareto-frontier property
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(3, 30), seed=st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_pareto_frontier_points_dominate_no_other(n, seed):
+    """Every point the report exposes as Pareto-optimal must not be
+    dominated by ANY measured episode (not just frontier members)."""
+    rng = np.random.default_rng(seed)
+    report = AutotuneReport()
+    for i in range(n):
+        thr, mem, acc = rng.random(3)
+        report.episodes.append(Episode(
+            index=i, config={"bias_rate": 1.0 + i},
+            metrics={"throughput": thr, "memory": mem, "accuracy": acc},
+            reward=thr, cache_hit_rate=0.0, steps=1))
+    front = report.pareto_points()
+    assert front                                 # never empty for n ≥ 1
+    all_pts = np.array([[e.metrics["throughput"], -e.metrics["memory"],
+                         e.metrics["accuracy"]] for e in report.episodes])
+    for ep in front:
+        p = np.array([ep.metrics["throughput"], -ep.metrics["memory"],
+                      ep.metrics["accuracy"]])
+        dominated = (np.all(all_pts >= p, axis=1)
+                     & np.any(all_pts > p, axis=1))
+        assert not dominated.any()
+
+
+def test_episode_space_decodes_live_knobs():
+    acfg = AutotuneConfig()
+    sp = episode_space(acfg)
+    rng = np.random.default_rng(0)
+    for u in sp.sample(rng, 32):
+        cfg = sp.decode(u)
+        assert 1.0 <= cfg["bias_rate"] <= acfg.max_bias_rate
+        assert 0.0 < cfg["cache_volume_mb"] <= acfg.max_cache_mb
+        assert cfg["parallel_mode"] in ("seq", "mode1", "mode2")
+        assert 1 <= cfg["workers"] <= acfg.max_workers
+
+
+# ---------------------------------------------------------------------------
+# closed-loop acceptance: fit_autotuned on a synthetic graph
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def autotune_report(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    acfg = AutotuneConfig(episodes=4, steps_per_episode=5, warmup_steps=2,
+                          presample=48, surrogate_trees=16, ppo_updates=2,
+                          ppo_horizon=6, max_workers=3,
+                          w_throughput=1.0, w_memory=0.0, w_accuracy=0.0,
+                          seed=0)
+    return tr.fit_autotuned(acfg), tr
+
+
+def test_fit_autotuned_completes_episodes(autotune_report):
+    rep, _ = autotune_report
+    assert len(rep.episodes) >= 3                  # ≥3 autotune episodes
+    assert all(ep.steps == 5 for ep in rep.episodes)
+    for ep in rep.episodes:
+        for m in ("throughput", "memory", "accuracy"):
+            assert np.isfinite(ep.metrics[m])
+
+
+def test_fit_autotuned_changes_a_knob(autotune_report):
+    rep, _ = autotune_report
+    changed = rep.changed_knobs()
+    assert {"bias_rate", "cache_volume_mb", "parallel_mode"} & set(changed), \
+        f"no tuned knob changed across episodes: {changed}"
+
+
+def test_fit_autotuned_beats_fixed_baseline(autotune_report):
+    """Final measured throughput ≥ the fixed seed-config baseline, measured
+    in the SAME run (episode 0 is the seed configuration)."""
+    rep, tr = autotune_report
+    assert rep.baseline.index == 0
+    assert (rep.final_metrics["throughput"]
+            >= rep.baseline_metrics["throughput"])
+    # the trainer is left running the recommended configuration
+    best = rep.best.config
+    assert tr.cfg.parallel_mode == best["parallel_mode"]
+    assert np.isclose(tr.cfg.bias_rate, best["bias_rate"])
+
+
+def test_fit_autotuned_from_cacheless_config(smoke_graph, smoke_gnn_cfg):
+    """A cache-less seed config (Θ=0, e.g. the pyg_like shape) must be
+    recorded truthfully in the baseline episode and the controller must be
+    able to bootstrap a cache live."""
+    cfg = smoke_gnn_cfg.replace(cache_volume_mb=0.0, bias_rate=1.0)
+    tr = A3GNNTrainer(smoke_graph, cfg, seed=0)
+    assert tr.cache is None
+    acfg = AutotuneConfig(episodes=3, steps_per_episode=4, warmup_steps=0,
+                          presample=24, surrogate_trees=8, ppo_updates=1,
+                          ppo_horizon=4, seed=0)
+    rep = tr.fit_autotuned(acfg)
+    assert rep.baseline.config["cache_volume_mb"] == 0.0
+    assert rep.baseline.cache_hit_rate == 0.0
+    # later episodes created a real cache live
+    assert any(ep.config["cache_volume_mb"] > 0 for ep in rep.episodes[1:])
+    # the trainer ends on the recommendation: cache state matches its Θ
+    best_vol = rep.best.config["cache_volume_mb"]
+    assert (tr.cache is None) == (best_vol <= 0)
+
+
+def test_fit_autotuned_all_infeasible_flags_report(smoke_graph,
+                                                   smoke_gnn_cfg):
+    """An impossible memory budget must be reported, not silently ignored:
+    best falls back to the least-memory measured point, flagged."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    acfg = AutotuneConfig(episodes=2, steps_per_episode=3, warmup_steps=0,
+                          presample=24, surrogate_trees=8, ppo_updates=1,
+                          ppo_horizon=4, memory_limit_bytes=1.0, seed=0)
+    rep = tr.fit_autotuned(acfg)
+    assert rep.best_feasible is False
+    assert rep.best.metrics["memory"] == min(
+        ep.metrics["memory"] for ep in rep.episodes)
+
+
+def test_shutdown_discards_backlog_without_training(smoke_graph,
+                                                    smoke_gnn_cfg):
+    """shutdown() runs in `finally` during exception unwind — it must NOT
+    re-enter train_fn on the pending backlog (that would mask the error)."""
+    calls = {"n": 0}
+
+    def counting_train_fn(mb):
+        calls["n"] += 1
+        return 0.0, 0.0
+
+    pipe = Pipeline(smoke_graph, smoke_gnn_cfg, counting_train_fn, seed=0)
+    batches = list(seed_loader(smoke_graph, smoke_gnn_cfg.batch_size, 0))[:6]
+    pipe.submit(batches)
+    pipe.step()
+    assert calls["n"] == 1 and pipe.inflight == 5
+    pipe.shutdown()
+    assert calls["n"] == 1                      # backlog discarded untrained
+    assert pipe.inflight == 0
+
+
+def test_fit_autotuned_feedback_reaches_surrogate(smoke_graph,
+                                                  smoke_gnn_cfg):
+    """Measured points must land in the surrogate training set (FEEDBACK)."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    pipe = Pipeline(smoke_graph, tr.cfg, tr._train_fn, cache=tr.cache,
+                    weight_fn=tr.weight_fn, seed=0)
+    acfg = AutotuneConfig(episodes=2, steps_per_episode=3, warmup_steps=0,
+                          presample=24, surrogate_trees=8, ppo_updates=1,
+                          ppo_horizon=4, seed=0)
+    ctrl = AutotuneController(tr, pipe, acfg)
+    try:
+        rep = ctrl.run()
+    finally:
+        pipe.shutdown()
+    # presample analytic points + one per measured episode
+    assert len(ctrl._X) == acfg.presample + len(rep.episodes)
+    assert len(ctrl._measured_keys) == len(
+        {tuple(sorted(e.config.items())) for e in rep.episodes})

@@ -1,7 +1,7 @@
 """Feature cache: policies, device map consistency, hit accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cache import FeatureCache
 from repro.core.locality import expected_hit_rate

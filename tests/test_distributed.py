@@ -102,9 +102,12 @@ def test_cost_analysis_known_matmul():
                                   NamedSharding(mesh, P(None, None))),
                     out_shardings=NamedSharding(mesh, P("d", None)))
         import numpy as np
+        from repro.launch.xla_compat import cost_analysis_dict
         c = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
                     jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
-        fl = c.cost_analysis()["flops"]
+        ca = cost_analysis_dict(c)
+        assert ca, "backend produced no cost analysis"
+        fl = ca["flops"]
         want = 2 * M * N * K / 8
         assert abs(fl - want) / want < 0.05, (fl, want)
         print("CALIBRATED", fl, want)
@@ -208,6 +211,7 @@ def test_pipeline_parallel_matches_sequential():
     assert "PP_OK" in out
 
 
+@pytest.mark.slow
 def test_dryrun_cell_tiny_mesh():
     """run_cell machinery works end-to-end on a small forced-device mesh
     (uses the real 256/512-device path in launch/dryrun.py; here we only

@@ -13,6 +13,7 @@ def trainer(smoke_graph, smoke_gnn_cfg):
     return A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
 
 
+@pytest.mark.slow
 def test_all_modes_complete_and_learn(smoke_graph, smoke_gnn_cfg):
     for mode in ("seq", "mode1", "mode2"):
         tr = A3GNNTrainer(smoke_graph,
@@ -60,6 +61,7 @@ def test_throughput_model_amdahl():
     assert np.isclose(m1[-1], 1.0 / (st.t_train * 10))
 
 
+@pytest.mark.slow
 def test_modeled_memory_matches_mode(smoke_graph, smoke_gnn_cfg):
     r = {}
     for mode in ("seq", "mode1", "mode2"):

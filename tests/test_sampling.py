@@ -2,7 +2,7 @@
 property-based invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sampling import (reservoir_sample_ref, es_sample, es_keys,
                                  NeighborSampler, seed_loader)

@@ -9,6 +9,8 @@ Validates the paper's HEADLINE CLAIMS at smoke scale:
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow      # end-to-end system runs — full lane only
+
 from repro.configs.gnn import gnn_config
 from repro.core.a3gnn import A3GNNTrainer, run_config, apply_baseline
 from repro.core.cache import FeatureCache
