@@ -1,8 +1,13 @@
-# Tier-1 verification + fast lane.  See scripts/ci.sh for the CI entry.
+# Tier-1 verification + fast lane.
+#
+# CI: .github/workflows/ci.yml runs scripts/ci.sh on every push/PR —
+# three jobs (lint / fast / full) mirroring the lanes below; JUnit XML +
+# per-lane timing land in artifacts/ and are uploaded per run.
+# Badge: https://github.com/<org>/<repo>/actions/workflows/ci.yml/badge.svg
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast autotune-demo bench-quick
+.PHONY: test test-fast lint ci autotune-demo bench-quick scaleout-demo
 
 test:            ## full tier-1 suite (the ROADMAP bar)
 	$(PY) -m pytest -x -q
@@ -10,9 +15,19 @@ test:            ## full tier-1 suite (the ROADMAP bar)
 test-fast:       ## fast lane: skips the slow pipeline/system tests
 	$(PY) -m pytest -x -q -m "not slow"
 
+lint:            ## ruff (or the offline fallback) over src/tests/benchmarks
+	bash scripts/ci.sh lint
+
+ci:              ## everything CI runs: lint + fast + full, with artifacts
+	bash scripts/ci.sh all
+
 autotune-demo:   ## online auto-tuning on a smoke graph (paper §III-C)
 	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
 	    --autotune --steps 6 --episodes-autotune 4
+
+scaleout-demo:   ## 2-partition data-parallel smoke run + restore proof
+	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
+	    --partitions 2 --steps 4
 
 bench-quick:     ## reduced benchmark sweep
 	$(PY) -m benchmarks.run --quick

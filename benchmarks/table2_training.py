@@ -3,10 +3,9 @@ reddit- and products-like synthetic graphs.  Metrics: throughput (epochs/s —
 scaled to the synthetic size), peak modeled memory, test accuracy."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save_json, bench_gnn_cfg
-from repro.core.a3gnn import run_config, apply_baseline
+from repro.core.a3gnn import run_config
 from repro.graph.synthetic import dataset_like
 
 STEPS = 16

@@ -9,11 +9,10 @@ finds a configuration at least as good as the hand-fixed one.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save_json, bench_gnn_cfg
 from repro.configs.gnn import AutotuneConfig
-from repro.core.a3gnn import A3GNNTrainer, apply_baseline, run_config
+from repro.core.a3gnn import A3GNNTrainer, run_config
 from repro.graph.synthetic import dataset_like
 
 BASELINES = ("a3gnn", "pyg_like", "quiver_like")

@@ -61,3 +61,20 @@ print(f"autotuned: episode {best.index} chosen — "
       f"{best.metrics['throughput']:.1f} steps/s vs fixed seed config "
       f"{report.baseline_metrics['throughput']:.1f} steps/s; "
       f"{len(report.pareto_points())} Pareto-optimal measured points")
+
+# 5. SCALE-OUT (the paper's headline): partition the graph with the
+# locality-aware assigner, give every partition its own cache + pipeline,
+# and synchronize gradients across the partition mesh (host-simulated on
+# one CPU; real devices drop in transparently).  Same smoke run as
+#     PYTHONPATH=src python -m repro.launch.train \
+#         --arch graphsage-products --smoke --partitions 2 --steps 4
+from repro.core.a3gnn import make_trainer
+
+trainer = make_trainer(graph, cfg.replace(partitions=2), seed=0)
+plan = trainer.plan
+print(f"partitions: sizes={[len(ns) for ns in plan.node_sets]} "
+      f"edge_locality={plan.edge_locality(graph):.3f} (locality method)")
+res = trainer.run_epochs(epochs=1, max_steps_per_epoch=8)
+print(f"[2-part] agg-thr={res.modeled_steps_s:6.1f} steps/s  "
+      f"mem={res.memory_bytes/2**20:7.1f} MiB  acc={res.test_acc:.3f}  "
+      f"cache-hit={res.cache_hit_rate:.2f}")

@@ -1,21 +1,70 @@
 #!/usr/bin/env bash
-# CI entry point.
+# CI entry point — used by .github/workflows/ci.yml and runnable locally.
 #
-# Lane 1 (fast):  everything except tests marked `slow` — the
-#                 sub-minute signal for every push.
-# Lane 2 (full):  the tier-1 command from ROADMAP.md, including the slow
-#                 pipeline/system tests.  This is the merge bar.
+#     scripts/ci.sh [lint|fast|full|all]     (default: all)
 #
-# Optional test extra: `hypothesis` enables real property-based search in
-# test_autotune/test_cache/test_kernels/test_sampling; without it the
-# deterministic fallback in tests/_hypothesis_compat.py runs a fixed-case
-# sweep, so CI works offline either way.
+# Lanes:
+#   lint:  `ruff check src tests benchmarks` (config in pyproject.toml);
+#          falls back to scripts/lint_fallback.py (same rule subset) on
+#          hosts without ruff, so the lane is meaningful offline.
+#   fast:  everything except tests marked `slow` — the sub-minute signal
+#          for every push.  The CI fast job does NOT install `hypothesis`,
+#          keeping the tests/_hypothesis_compat.py shim path covered.
+#   full:  the tier-1 command from ROADMAP.md, including the slow
+#          pipeline/system tests.  This is the merge bar.
+#
+# Every lane writes artifacts/ (JUnit XML per pytest lane + a cumulative
+# timing.csv of per-lane wall-clock), uploaded by the workflow so test-
+# runtime regressions are visible PR-over-PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== lane 1: fast (-m 'not slow') ==="
-python -m pytest -x -q -m "not slow"
+LANE="${1:-all}"
+ART="artifacts"
+mkdir -p "$ART"
+[ -f "$ART/timing.csv" ] || echo "lane,seconds" > "$ART/timing.csv"
 
-echo "=== lane 2: full tier-1 ==="
-python -m pytest -x -q
+run_lane() {  # run_lane <name> <cmd...>
+    local name="$1"; shift
+    echo "=== lane: $name ==="
+    local t0 t1
+    t0=$(date +%s.%N)
+    "$@"
+    t1=$(date +%s.%N)
+    awk -v n="$name" -v a="$t0" -v b="$t1" \
+        'BEGIN { printf "%s,%.2f\n", n, b - a }' >> "$ART/timing.csv"
+    awk -v a="$t0" -v b="$t1" \
+        'BEGIN { printf "=== lane %s done in %.1fs ===\n", "'"$name"'", b - a }'
+}
+
+lint_cmd() {
+    if python -m ruff --version >/dev/null 2>&1; then
+        python -m ruff check src tests benchmarks
+    else
+        echo "(ruff unavailable — offline fallback, same rule subset)"
+        python scripts/lint_fallback.py src tests benchmarks
+    fi
+}
+
+case "$LANE" in
+    lint)
+        run_lane lint lint_cmd ;;
+    fast)
+        run_lane fast python -m pytest -x -q -m "not slow" \
+            --junitxml "$ART/junit_fast.xml" ;;
+    full)
+        run_lane full python -m pytest -x -q \
+            --junitxml "$ART/junit_full.xml" ;;
+    all)
+        run_lane lint lint_cmd
+        run_lane fast python -m pytest -x -q -m "not slow" \
+            --junitxml "$ART/junit_fast.xml"
+        run_lane full python -m pytest -x -q \
+            --junitxml "$ART/junit_full.xml" ;;
+    *)
+        echo "usage: scripts/ci.sh [lint|fast|full|all]" >&2
+        exit 2 ;;
+esac
+echo "--- $ART/timing.csv ---"
+cat "$ART/timing.csv"

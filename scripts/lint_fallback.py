@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Offline lint fallback for environments without ruff.
+
+Mirrors the rule subset committed in pyproject.toml ([tool.ruff.lint]):
+E9 (syntax errors), F401 (unused imports; __init__.py re-exports exempt)
+and F811 (redefinition of a top-level def/class by another def/class).
+CI installs real ruff; this keeps `scripts/ci.sh lint` meaningful on
+air-gapped hosts.
+
+    python scripts/lint_fallback.py src tests benchmarks examples
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+
+def _imported_names(node):
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            yield (a.asname or a.name.split(".")[0]), node.lineno
+    elif isinstance(node, ast.ImportFrom) and node.module != "__future__":
+        for a in node.names:
+            if a.name != "*":
+                yield (a.asname or a.name), node.lineno
+
+
+def check_file(path: Path):
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [(e.lineno or 0, f"E999 syntax error: {e.msg}")]
+    lines = src.splitlines()
+    problems = []
+    imports = {}
+    for node in ast.walk(tree):
+        for name, lineno in _imported_names(node):
+            if "noqa" in lines[lineno - 1]:       # ruff-style suppression
+                continue
+            imports.setdefault(name, lineno)
+    used = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    used |= {n.attr for n in ast.walk(tree) if isinstance(n, ast.Attribute)}
+    # names referenced inside string annotations / __all__ exports count
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            used.add(node.value)
+    if path.name != "__init__.py":
+        for name, lineno in sorted(imports.items(), key=lambda kv: kv[1]):
+            if name not in used:
+                problems.append((lineno, f"F401 `{name}` imported but unused"))
+    toplevel = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name in toplevel:
+                problems.append((node.lineno,
+                                 f"F811 redefinition of `{node.name}` "
+                                 f"(first defined line {toplevel[node.name]})"))
+            toplevel[node.name] = node.lineno
+    return problems
+
+
+def main(argv):
+    roots = [Path(p) for p in (argv or ["src", "tests", "benchmarks"])]
+    failed = 0
+    for root in roots:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            for lineno, msg in check_file(f):
+                print(f"{f}:{lineno}: {msg}")
+                failed += 1
+    if failed:
+        print(f"lint_fallback: {failed} problem(s)")
+        return 1
+    print(f"lint_fallback: clean ({', '.join(str(r) for r in roots)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -7,8 +7,8 @@ plus a ``smoke()`` reduced config of the same family for CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
 
 
 @dataclass(frozen=True)

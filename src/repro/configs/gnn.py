@@ -41,6 +41,10 @@ class AutotuneConfig:
     max_workers: int = 4
     max_cache_mb: float = 64.0
     max_bias_rate: float = 16.0
+    # > 1 adds the `partitions` knob: applied through the restart-capable
+    # path (checkpoint → rebuild trainer → restore), not a live swap
+    max_partitions: int = 1
+    restart_dir: str = ""            # "" → a fresh temp dir per controller
     seed: int = 0
 
     def replace(self, **kw) -> "AutotuneConfig":

@@ -13,7 +13,6 @@ Baseline adapters reproduce the comparison systems *as configurations*:
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -29,8 +28,9 @@ from repro.core.sampling import NeighborSampler, seed_loader
 from repro.graph.batch import generate_batch, batch_device_arrays
 from repro.graph.partition import partition, overlap_ratio
 from repro.graph.storage import Graph
-from repro.models.gnn import decls_gnn, make_train_step, make_eval_fn, gnn_forward
+from repro.models.gnn import decls_gnn, make_train_step, make_eval_fn
 from repro.models.params import init_params, param_bytes
+from repro.train.checkpoint import TrainerCheckpointMixin
 from repro.train.optimizer import make_adamw
 
 RUNTIME_BYTES = 16 * 2**20        # fixed per-worker runtime context (Eq. 3)
@@ -68,7 +68,7 @@ def apply_baseline(cfg: GNNConfig, baseline: Optional[str]) -> GNNConfig:
     raise ValueError(baseline)
 
 
-class A3GNNTrainer:
+class A3GNNTrainer(TrainerCheckpointMixin):
     def __init__(self, graph: Graph, cfg: GNNConfig, seed: int = 0):
         self.full_graph = graph
         self.cfg = cfg
@@ -200,6 +200,29 @@ class A3GNNTrainer:
         return memory_seq(mt)
 
     # ------------------------------------------------------------------
+    @property
+    def caches(self):
+        """Uniform per-partition cache view (single-partition: one entry);
+        the autotune controller iterates this on both trainer kinds."""
+        return [self.cache]
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache.stats.hit_rate if self.cache is not None else 0.0
+
+    def make_pipeline(self) -> Pipeline:
+        return Pipeline(self.graph, self.cfg, self._train_fn,
+                        cache=self.cache, weight_fn=self.weight_fn,
+                        seed=self.seed)
+
+    # checkpoint/restart interface: TrainerCheckpointMixin provides
+    # state_dict/load_state_dict/save/restore (+ the partition-count guard)
+    def checkpoint_extra(self) -> Dict:
+        return {**super().checkpoint_extra(),
+                "cache_stats": [dataclasses.asdict(self.cache.stats)
+                                if self.cache is not None else None]}
+
+    # ------------------------------------------------------------------
     def apply_live_config(self, knobs: Dict, pipe: Optional[Pipeline] = None):
         """Episode-boundary reconfiguration (autotune controller).
 
@@ -248,14 +271,19 @@ class A3GNNTrainer:
         acfg = autotune or self.cfg.autotune
         if seed is not None:
             acfg = acfg.replace(seed=seed)
-        pipe = Pipeline(self.graph, self.cfg, self._train_fn,
-                        cache=self.cache, weight_fn=self.weight_fn,
-                        seed=self.seed)
-        ctrl = AutotuneController(self, pipe, acfg)
+        ctrl = AutotuneController(self, self.make_pipeline(), acfg)
         try:
-            return ctrl.run()
+            report = ctrl.run()
+            if ctrl.tr is not self:
+                # a `partitions` restart rebuilt the trainer mid-run; keep
+                # this object's params/opt state current — the rebuilt
+                # topology lives in report.final_trainer
+                self.load_state_dict(ctrl.tr.state_dict())
+            return report
         finally:
-            pipe.shutdown()
+            # the controller may have swapped (trainer, pipe) through the
+            # partitions restart path — shut down whatever is current
+            ctrl.pipe.shutdown()
 
     # ------------------------------------------------------------------
     def evaluate(self, max_batches: int = 8) -> float:
@@ -280,6 +308,18 @@ class A3GNNTrainer:
                       if self.cache else 0.0)
         return accuracy_drop_model(self.eta, self.cfg.bias_rate,
                                    self.graph.density(), cache_frac)
+
+
+def make_trainer(graph: Graph, cfg: GNNConfig, seed: int = 0,
+                 partition_method: str = "locality"):
+    """Trainer factory: the multi-partition scale-out trainer when
+    ``cfg.partitions > 1``, the classic single-partition ``A3GNNTrainer``
+    otherwise.  Both share the checkpoint/restore + autotune interface."""
+    if cfg.partitions > 1:
+        from repro.core.multipart import MultiPartitionTrainer
+        return MultiPartitionTrainer(graph, cfg, seed=seed,
+                                     method=partition_method)
+    return A3GNNTrainer(graph, cfg, seed=seed)
 
 
 def run_config(graph: Graph, cfg: GNNConfig, baseline: Optional[str] = None,

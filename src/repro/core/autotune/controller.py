@@ -42,7 +42,6 @@ measured Pareto front exactly as in Tab. II.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -64,20 +63,28 @@ HIT_SPEEDUP = 0.6
 
 
 def episode_space(acfg: AutotuneConfig) -> Space:
-    """The live-swappable subset of Table I: knobs that can be applied at an
-    episode boundary without rebuilding the trainer (γ, Θ, mode, workers)."""
-    return Space([
+    """The tunable subset of Table I.  γ, Θ, mode and workers swap live at
+    an episode boundary; with ``max_partitions > 1`` the partition count
+    joins the space and is applied through the restart-capable path
+    (checkpoint → rebuild trainer → restore)."""
+    knobs = [
         Knob("bias_rate", "log", 1.0, acfg.max_bias_rate),
         Knob("cache_volume_mb", "log", 0.05, acfg.max_cache_mb),
         Knob("parallel_mode", "cat", choices=MODES),
         Knob("workers", "int", 1, acfg.max_workers),
-    ])
+    ]
+    if acfg.max_partitions > 1:
+        knobs.append(Knob("partitions", "int", 1, acfg.max_partitions))
+    return Space(knobs)
 
 
 def _cfg_key(cfg: Dict) -> Tuple:
-    return (round(float(cfg["bias_rate"]), 2),
-            round(float(cfg["cache_volume_mb"]), 2),
-            cfg["parallel_mode"], int(cfg["workers"]))
+    out = []
+    for k in sorted(cfg):
+        v = cfg[k]
+        out.append((k, round(float(v), 2)
+                    if isinstance(v, (int, float, np.floating)) else v))
+    return tuple(out)
 
 
 @dataclass
@@ -98,6 +105,10 @@ class AutotuneReport:
     best: Optional[Episode] = None
     best_feasible: bool = True      # False ⇒ EVERY measured episode broke
                                     # the memory limit; best = least-memory
+    final_trainer: Optional[object] = None  # the trainer left running the
+                                    # recommendation — differs from the
+                                    # caller's when a `partitions` restart
+                                    # rebuilt it (use this one afterwards)
 
     @property
     def baseline_metrics(self) -> Dict[str, float]:
@@ -134,6 +145,9 @@ class AutotuneController:
         self.pipe = pipe
         self.acfg = acfg or trainer.cfg.autotune
         self.space = episode_space(self.acfg)
+        self._knob_names = {k.name for k in self.space.knobs}
+        self._restart_mgr = None        # lazy CheckpointManager (restart path)
+        self.restarts = 0
         self.rng = np.random.default_rng(self.acfg.seed)
         self.surrogate = Surrogate(seed=self.acfg.seed,
                                    n_trees=self.acfg.surrogate_trees)
@@ -176,11 +190,14 @@ class AutotuneController:
         cache-less trainer; clamping to the space bounds happens only at
         encode time, see ``_encode``)."""
         c = self.tr.cfg
-        return {"bias_rate": c.bias_rate,
-                "cache_volume_mb": (self.tr.cache.volume_mb
-                                    if self.tr.cache is not None else 0.0),
-                "parallel_mode": self.pipe.mode,
-                "workers": self.pipe.workers_n}
+        cfg = {"bias_rate": c.bias_rate,
+               "cache_volume_mb": (self.tr.cache.volume_mb
+                                   if self.tr.cache is not None else 0.0),
+               "parallel_mode": self.pipe.mode,
+               "workers": self.pipe.workers_n}
+        if "partitions" in self._knob_names:
+            cfg["partitions"] = int(c.partitions)
+        return cfg
 
     def _encode(self, cfg: Dict) -> np.ndarray:
         """Encode for the surrogate, clamping out-of-space values (e.g. the
@@ -210,6 +227,11 @@ class AutotuneController:
         st = StageTimes(st0.t_sample, st0.t_batch * scale, st0.t_train)
         step_t = bottleneck_step_time(cfg["parallel_mode"], st,
                                       int(cfg["workers"]))
+        # scale-out: p partitions each run the per-device pipeline, so
+        # aggregate throughput AND fleet memory scale ~linearly with p,
+        # while partition overlap η (Eq. 1) shrinks accuracy
+        cur_p = max(int(getattr(self.tr.cfg, "partitions", 1)), 1)
+        p = max(int(cfg.get("partitions", cur_p)), 1)
         mt = MemoryTerms(
             cache_bytes=cfg["cache_volume_mb"] * 2**20,
             batch_bytes=max(base_stats.peak_batch_bytes, 1),
@@ -219,10 +241,11 @@ class AutotuneController:
                "mode1": lambda t: memory_mode1(t, int(cfg["workers"])),
                "mode2": lambda t: memory_mode2(t, int(cfg["workers"])),
                }[cfg["parallel_mode"]](mt)
-        drop = accuracy_drop_model(self.tr.eta, cfg["bias_rate"],
+        eta = min(1.0, self.tr.eta * cur_p / p)
+        drop = accuracy_drop_model(eta, cfg["bias_rate"],
                                    self.tr.graph.density(),
                                    self._cache_frac(cfg["cache_volume_mb"]))
-        return {"throughput": 1.0 / max(step_t, 1e-9), "memory": float(mem),
+        return {"throughput": p / max(step_t, 1e-9), "memory": float(mem) * p,
                 "accuracy": max(base_acc - drop, 0.0)}
 
     # -- surrogate bookkeeping ----------------------------------------------
@@ -269,26 +292,71 @@ class AutotuneController:
     # -- MEASURE -------------------------------------------------------------
     def measure(self, index: int, cfg: Dict,
                 predicted: Optional[Dict] = None) -> Episode:
-        if self.tr.cache is not None:
-            self.tr.cache.stats.reset()
+        for c in getattr(self.tr, "caches", [self.tr.cache]):
+            if c is not None:
+                c.stats.reset()
         stats = self.pipe.run(max_steps=self.acfg.steps_per_episode)
         st = stats.stage_times()
         step_t = bottleneck_step_time(self.pipe.mode, st, self.pipe.workers_n)
+        # multi-partition pipelines report aggregate (fleet) throughput
+        scale = getattr(self.pipe, "scale_factor", 1)
         metrics = {
-            "throughput": 1.0 / max(step_t, 1e-9),
+            "throughput": scale / max(step_t, 1e-9),
             "memory": self.tr.modeled_memory(stats, mode=self.pipe.mode,
                                              workers=self.pipe.workers_n),
             "accuracy": self.tr.evaluate(max_batches=self.acfg.eval_batches),
         }
         ep = Episode(index=index, config=dict(cfg), metrics=metrics,
                      reward=self.reward(metrics),
-                     cache_hit_rate=(self.tr.cache.stats.hit_rate
-                                     if self.tr.cache else 0.0),
+                     cache_hit_rate=getattr(
+                         self.tr, "cache_hit_rate",
+                         self.tr.cache.stats.hit_rate
+                         if self.tr.cache else 0.0),
                      steps=stats.steps, predicted=predicted)
         self._measured_keys.add(_cfg_key(cfg))
         self._push_point(self._encode(cfg), metrics)        # FEEDBACK
         self._refit()
         return ep
+
+    # -- RECONFIGURE: restart-capable path for the `partitions` knob ---------
+    def _proposed_partitions(self, cfg: Dict) -> int:
+        return max(int(cfg.get("partitions",
+                               getattr(self.tr.cfg, "partitions", 1))), 1)
+
+    def _restart(self, new_partitions: int):
+        """checkpoint → rebuild trainer at the new partition count → restore.
+
+        Params and optimizer state round-trip through train/checkpoint.py
+        (the same machinery a real elastic restart uses), so training
+        resumes exactly where it left off on the new topology."""
+        import tempfile
+        from repro.core.a3gnn import make_trainer
+        from repro.train.checkpoint import CheckpointManager
+        if self._restart_mgr is None:
+            d = self.acfg.restart_dir or tempfile.mkdtemp(
+                prefix="a3gnn_restart_")
+            self._restart_mgr = CheckpointManager(d, keep=1, async_save=False)
+        old_p = max(int(getattr(self.tr.cfg, "partitions", 1)), 1)
+        self.restarts += 1
+        # the trainer's own save() records the full manifest extra
+        # (partitions, global_steps, cache accounting) so progress counters
+        # survive the migration
+        self.tr.save(self._restart_mgr, step=self.restarts)
+        self.pipe.shutdown()
+        new_tr = make_trainer(self.tr.full_graph,
+                              self.tr.cfg.replace(partitions=new_partitions),
+                              seed=self.tr.seed)
+        new_tr.restore(self._restart_mgr, step=self.restarts,
+                       expect_partitions=old_p)
+        self.tr, self.pipe = new_tr, new_tr.make_pipeline()
+
+    def _apply_config(self, cfg: Dict):
+        """Full RECONFIGURE: restart if the partition count changed, then
+        apply the live-swappable knobs to the (possibly new) trainer."""
+        if self._proposed_partitions(cfg) != max(
+                int(getattr(self.tr.cfg, "partitions", 1)), 1):
+            self._restart(self._proposed_partitions(cfg))
+        self.tr.apply_live_config(cfg, self.pipe)
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> AutotuneReport:
@@ -305,7 +373,7 @@ class AutotuneController:
         self.prewarm(self.pipe.stats, base.metrics["accuracy"])
         for e in range(1, acfg.episodes):
             cfg, pred = self.propose()
-            self.tr.apply_live_config(cfg, self.pipe)       # RECONFIGURE
+            self._apply_config(cfg)                         # RECONFIGURE
             report.episodes.append(self.measure(e, cfg, predicted=pred))
         feasible = [ep for ep in report.episodes
                     if self.feasible(ep.metrics)]
@@ -319,5 +387,6 @@ class AutotuneController:
             report.best_feasible = False
         # leave the trainer running the recommended configuration
         if _cfg_key(report.best.config) != _cfg_key(self._current_config()):
-            self.tr.apply_live_config(report.best.config, self.pipe)
+            self._apply_config(report.best.config)
+        report.final_trainer = self.tr
         return report

@@ -6,8 +6,7 @@ search for equal-quality configurations.
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 

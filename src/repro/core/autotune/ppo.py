@@ -7,8 +7,7 @@ value MLP in pure JAX, clipped-objective PPO with GAE(λ)/TD value targets.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax

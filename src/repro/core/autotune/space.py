@@ -5,7 +5,6 @@ concrete configuration dict.  The same vector feeds the surrogate.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 

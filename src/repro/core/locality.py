@@ -38,6 +38,17 @@ def accuracy_drop_model(eta: float, gamma: float, density: float,
     return float(bias_term * density_damp + part_term)
 
 
+def edge_locality_score(g, owner: np.ndarray) -> float:
+    """Fraction of edges whose endpoints share a partition under ``owner``
+    (node → partition id).  This is the objective the locality-aware
+    partitioner maximizes: every cross-partition edge is a potential halo
+    fetch, and 1 − score is the cut ratio that shrinks η in Eq. (1)."""
+    src = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    if len(src) == 0:
+        return 1.0
+    return float((owner[src] == owner[g.indices]).mean())
+
+
 def expected_hit_rate(cache_frac: float, gamma: float,
                       skew: float = 0.8) -> float:
     """Analytic hit-rate model used by the surrogate's feature set.

@@ -1,0 +1,532 @@
+"""Multi-partition data-parallel GNN training on the distributed substrate.
+
+The paper's headline result is scale-OUT: many affordable devices, each
+training on its own graph partition with no remote feature access, beat a
+few expensive ones.  ``MultiPartitionTrainer`` reproduces that topology on
+the existing substrate:
+
+  * ``graph/partition.py`` assigns nodes with the locality-aware method
+    (fewest cross-partition halo nodes — every cut edge is a feature the
+    device would otherwise fetch remotely);
+  * each partition owns a private ``FeatureCache`` + reconfigurable
+    ``Pipeline`` (sampling bias γ, cache volume Θ, parallel mode all apply
+    per partition, exactly as on a real device);
+  * gradients synchronize through ``distributed/collectives.grad_allreduce``
+    under a mesh from ``launch/mesh.make_partition_mesh`` — a real device
+    mesh when the host has one device per partition, a ``HostSimMesh``
+    (identical arithmetic, no topology) on the 1-CPU CI container;
+  * checkpoint/restore rides ``train/checkpoint.py`` (partition topology +
+    per-partition cache hit accounting in the manifest) and restart/straggler
+    handling rides ``train/fault_tolerance.py`` (``fit_supervised``).
+
+Interface-compatible with ``A3GNNTrainer`` where the autotune controller
+needs it, so the episode space can tune ``partitions`` through the
+checkpoint → rebuild → restore restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.gnn import GNNConfig
+from repro.core.cache import FeatureCache
+from repro.core.locality import accuracy_drop_model, bias_weight_fn
+from repro.core.perf_model import (MemoryTerms, bottleneck_step_time,
+                                   memory_mode1, memory_mode2, memory_seq)
+from repro.core.pipeline import Pipeline, PipelineStats
+from repro.core.sampling import NeighborSampler, seed_loader
+from repro.distributed.collectives import grad_allreduce
+from repro.graph.batch import generate_batch, batch_device_arrays
+from repro.graph.partition import PartitionPlan, plan_partitions
+from repro.graph.storage import Graph
+from repro.launch.mesh import make_partition_mesh
+from repro.models.gnn import (decls_gnn, make_apply_fn, make_eval_fn,
+                              make_grad_fn)
+from repro.models.params import init_params, param_bytes
+from repro.train.checkpoint import CheckpointManager, TrainerCheckpointMixin
+from repro.train.fault_tolerance import SupervisorReport, TrainSupervisor
+from repro.train.optimizer import make_adamw
+
+RUNTIME_BYTES = 16 * 2**20        # fixed per-worker runtime context (Eq. 3)
+
+
+@dataclass
+class PartitionSlot:
+    """One partition's private training state (the per-device view)."""
+    index: int
+    graph: Graph
+    eta: float
+    cache: Optional[FeatureCache] = None
+    weight_fn: Optional[Callable] = None
+    pipe: Optional[Pipeline] = None
+    pending_grads: Optional[Dict] = None
+    _seed_iter: Optional[object] = None
+    _epoch: int = 0
+
+
+class MultiPipeline:
+    """Pipeline-shaped view over all partition pipelines.
+
+    Exposes the subset of the ``Pipeline`` contract the autotune controller
+    drives (``run`` / ``reconfigure`` / ``begin_stats`` / ``stats`` /
+    ``mode`` / ``workers_n`` / ``shutdown``); each ``run`` window executes
+    gradient-synchronized GLOBAL steps, so ``stats.steps`` counts
+    per-partition mini-batches (``scale_factor`` × global steps).
+    """
+
+    def __init__(self, trainer: "MultiPartitionTrainer"):
+        self.tr = trainer
+        self.stats = PipelineStats()
+
+    @property
+    def pipes(self) -> List[Pipeline]:
+        return [s.pipe for s in self.tr.slots]
+
+    @property
+    def mode(self) -> str:
+        return self.pipes[0].mode
+
+    @property
+    def workers_n(self) -> int:
+        return self.pipes[0].workers_n
+
+    @property
+    def scale_factor(self) -> int:
+        return len(self.tr.slots)
+
+    def begin_stats(self) -> PipelineStats:
+        self.stats = PipelineStats()
+        for p in self.pipes:
+            p.begin_stats()
+        return self.stats
+
+    def reconfigure(self, mode: Optional[str] = None,
+                    workers: Optional[int] = None, cache=None, weight_fn=None,
+                    batch_size: Optional[int] = None):
+        """Drain + swap each partition pipeline.  Per-partition cache and
+        bias always re-sync from the slots (they are per-partition state —
+        the ``cache``/``weight_fn`` arguments of the single-pipeline
+        contract are ignored here)."""
+        del cache, weight_fn
+        for slot in self.tr.slots:
+            slot.pipe.reconfigure(mode=mode, workers=workers,
+                                  cache=slot.cache, weight_fn=slot.weight_fn,
+                                  batch_size=batch_size)
+
+    def drain(self):
+        for p in self.pipes:
+            p.drain()
+
+    def shutdown(self):
+        for p in self.pipes:
+            p.shutdown()
+
+    def run(self, mode: Optional[str] = None, max_steps: Optional[int] = None,
+            fail_worker: Optional[int] = None) -> PipelineStats:
+        """Run ``max_steps`` gradient-synchronized global steps."""
+        import time
+        if mode is not None and mode != self.mode:
+            self.reconfigure(mode=mode)
+        tr = self.tr
+        n = max_steps if max_steps is not None else tr.steps_per_epoch()
+        stats = self.begin_stats()
+        # submit every seed batch upfront: under mode1/mode2 the worker
+        # pools prefetch ahead of the synchronized consumer, as on hardware
+        for slot in tr.slots:
+            seeds = [tr._next_seeds(slot) for _ in range(n)]
+            slot.pipe.submit(seeds, fail_worker=(fail_worker
+                                                 if slot.index == 0 else None))
+        t0 = time.perf_counter()
+        for _ in range(n):
+            tr._consume_synced_step()
+        stats.t_wall = time.perf_counter() - t0
+        self._aggregate(stats)
+        if fail_worker is not None:
+            self.pipes[0]._stop_pool()      # injected-failure pool is poisoned
+        return stats
+
+    def _aggregate(self, agg: PipelineStats):
+        for p in self.pipes:
+            st = p.stats
+            agg.steps += st.steps
+            agg.t_sample += st.t_sample
+            agg.t_batch += st.t_batch
+            agg.t_train += st.t_train
+            agg.losses += st.losses
+            agg.accs += st.accs
+            agg.reissued += st.reissued
+            agg.peak_batch_bytes = max(agg.peak_batch_bytes,
+                                       st.peak_batch_bytes)
+            agg.queue_peak = max(agg.queue_peak, st.queue_peak)
+
+
+class MultiPartitionTrainer(TrainerCheckpointMixin):
+    """Data-parallel A³GNN over ``cfg.partitions`` graph partitions.
+
+    Shared (params, opt_state); per-partition (subgraph, cache, sampler
+    bias, pipeline).  ``batch_size`` is per partition — the effective
+    global batch is ``partitions × batch_size``, matching the paper's
+    fixed-per-device batching."""
+
+    def __init__(self, graph: Graph, cfg: GNNConfig, seed: int = 0,
+                 method: str = "locality"):
+        if cfg.partitions < 1:
+            raise ValueError(f"partitions must be ≥ 1, got {cfg.partitions}")
+        self.full_graph = graph
+        self.cfg = cfg
+        self.seed = seed
+        self.plan: PartitionPlan = plan_partitions(graph, cfg.partitions,
+                                                   method, seed)
+        self.mesh = make_partition_mesh(self.plan.parts)
+        self._allreduce = grad_allreduce(self.mesh)
+        rng = jax.random.PRNGKey(seed)
+        self.decls = decls_gnn(cfg)
+        self.params = init_params(self.decls, rng)
+        self.opt = make_adamw()
+        self.opt_state = self.opt.init(self.params)
+        self._grad = make_grad_fn(cfg)
+        self._apply = make_apply_fn(cfg, self.opt)
+        self._eval = make_eval_fn(cfg)
+        self.slots = [self._make_slot(p, sub) for p, sub in
+                      enumerate(self.plan.subgraphs)]
+        self.eta = float(np.mean(self.plan.etas(graph)))
+        self.global_steps = 0
+
+    # ------------------------------------------------------------------
+    def _make_slot(self, p: int, sub: Graph) -> PartitionSlot:
+        cfg = self.cfg
+        cache = (FeatureCache(sub, cfg.cache_volume_mb, cfg.cache_policy,
+                              self.seed + p)
+                 if cfg.cache_volume_mb > 0 else None)
+        weight_fn = (bias_weight_fn(cache, cfg.bias_rate)
+                     if (cache is not None and cfg.bias_rate > 1.0) else None)
+        slot = PartitionSlot(index=p, graph=sub,
+                             eta=sub.num_nodes / max(self.full_graph.num_nodes,
+                                                     1),
+                             cache=cache, weight_fn=weight_fn)
+        slot.pipe = Pipeline(sub, cfg, self._slot_train_fn(slot), cache=cache,
+                             weight_fn=weight_fn, seed=self.seed + p)
+        return slot
+
+    def _slot_train_fn(self, slot: PartitionSlot):
+        """Per-partition "train" = local gradient computation; the shared
+        update is applied after the cross-partition all-reduce."""
+        def fn(mb):
+            arrays = batch_device_arrays(mb)
+            grads, loss, acc = self._grad(self.params, arrays["features"],
+                                          arrays["neigh_idxs"],
+                                          arrays["labels"])
+            slot.pending_grads = grads
+            return float(loss), float(acc)
+        return fn
+
+    def _next_seeds(self, slot: PartitionSlot) -> np.ndarray:
+        for _ in range(2):
+            if slot._seed_iter is None:
+                slot._seed_iter = seed_loader(
+                    slot.graph, self.cfg.batch_size,
+                    self.seed + slot.index + 131 * slot._epoch)
+            try:
+                return next(slot._seed_iter)
+            except StopIteration:
+                slot._seed_iter = None
+                slot._epoch += 1
+        # partition smaller than one batch: sample train seeds w/ replacement
+        ids = np.where(slot.graph.train_mask)[0]
+        if len(ids) == 0:
+            ids = np.arange(slot.graph.num_nodes)
+        rng = np.random.default_rng(self.seed + slot.index
+                                    + 131 * slot._epoch)
+        slot._epoch += 1
+        return rng.choice(ids, size=self.cfg.batch_size,
+                          replace=True).astype(np.int64)
+
+    # ------------------------------------------------------------------
+    def _consume_synced_step(self):
+        """Consume one submitted batch per partition, all-reduce the
+        gradients, apply the single shared optimizer update."""
+        grads = []
+        for slot in self.slots:
+            if not slot.pipe.step():
+                raise RuntimeError(f"partition {slot.index}: no batch "
+                                   f"in flight for the synced step")
+            grads.append(slot.pending_grads)
+            slot.pending_grads = None
+        mean = self._allreduce(grads)
+        self.params, self.opt_state = self._apply(self.params, self.opt_state,
+                                                  mean)
+        self.global_steps += 1
+
+    def global_step(self, fail_worker: Optional[int] = None):
+        """One gradient-synchronized step: each partition samples + batches
+        one mini-batch from its own subgraph through its own pipeline."""
+        for slot in self.slots:
+            slot.pipe.submit([self._next_seeds(slot)],
+                             fail_worker=(fail_worker if slot.index == 0
+                                          else None))
+        self._consume_synced_step()
+
+    def synced_update(self, arrays_list: List[Dict]):
+        """One data-parallel update from pre-generated per-partition device
+        arrays (gradient-parity harness; bypasses sampling)."""
+        grads, losses, accs = [], [], []
+        for arrays in arrays_list:
+            g, loss, acc = self._grad(self.params, arrays["features"],
+                                      arrays["neigh_idxs"], arrays["labels"])
+            grads.append(g)
+            losses.append(float(loss))
+            accs.append(float(acc))
+        mean = self._allreduce(grads)
+        self.params, self.opt_state = self._apply(self.params, self.opt_state,
+                                                  mean)
+        self.global_steps += 1
+        return float(np.mean(losses)), float(np.mean(accs))
+
+    # ------------------------------------------------------------------
+    def make_pipeline(self) -> MultiPipeline:
+        return MultiPipeline(self)
+
+    def steps_per_epoch(self) -> int:
+        """Global steps per epoch: the slowest partition sets the pace."""
+        return max(max(int(s.graph.train_mask.sum()) // self.cfg.batch_size
+                       for s in self.slots), 1)
+
+    def run_epochs(self, epochs: int = 1,
+                   max_steps_per_epoch: Optional[int] = None,
+                   mode: Optional[str] = None,
+                   fail_worker: Optional[int] = None,
+                   warmup_steps: int = 0, simulate: bool = False):
+        """Mirror of ``A3GNNTrainer.run_epochs`` over the partition fleet.
+        ``simulate`` is accepted for signature parity (execution is already
+        sequential-per-host on the CI container)."""
+        del simulate
+        from repro.core.a3gnn import RunResult
+        pipe = self.make_pipeline()
+        target_mode = mode or self.cfg.parallel_mode
+        if warmup_steps:
+            pipe.run(mode="seq", max_steps=warmup_steps)
+            pipe.reconfigure(mode=target_mode)
+            for c in self.caches:
+                if c is not None:
+                    c.stats.reset()
+        agg: Optional[PipelineStats] = None
+        try:
+            for ep in range(epochs):
+                stats = pipe.run(mode=target_mode,
+                                 max_steps=max_steps_per_epoch,
+                                 fail_worker=fail_worker if ep == 0 else None)
+                if agg is None:
+                    agg = stats
+                else:
+                    for k in ("steps", "t_sample", "t_batch", "t_train",
+                              "t_wall"):
+                        setattr(agg, k, getattr(agg, k) + getattr(stats, k))
+                    agg.losses += stats.losses
+                    agg.accs += stats.accs
+                    agg.reissued += stats.reissued
+                    agg.peak_batch_bytes = max(agg.peak_batch_bytes,
+                                               stats.peak_batch_bytes)
+        finally:
+            pipe.shutdown()
+        steps_per_epoch = (max_steps_per_epoch
+                           if max_steps_per_epoch is not None
+                           else self.steps_per_epoch())
+        parts = self.plan.parts
+        global_steps = max(agg.steps // parts, 1)
+        sps = (global_steps * parts) / agg.t_wall if agg.t_wall else 0.0
+        st = agg.stage_times()
+        step_t = bottleneck_step_time(target_mode, st, self.cfg.workers)
+        msps = parts / max(step_t, 1e-9)            # aggregate scale-out rate
+        return RunResult(
+            throughput_steps_s=sps,
+            throughput_epochs_s=sps / max(steps_per_epoch * parts, 1),
+            modeled_steps_s=msps,
+            modeled_epochs_s=msps / max(steps_per_epoch * parts, 1),
+            memory_bytes=self.modeled_memory(agg, mode=target_mode),
+            test_acc=self.evaluate(),
+            cache_hit_rate=self.cache_hit_rate,
+            stats=agg, steps_per_epoch=steps_per_epoch)
+
+    # ------------------------------------------------------------------
+    @property
+    def graph(self) -> Graph:
+        """Partition 0's subgraph (the controller's per-device view)."""
+        return self.slots[0].graph
+
+    @property
+    def cache(self) -> Optional[FeatureCache]:
+        return self.slots[0].cache
+
+    @property
+    def caches(self) -> List[Optional[FeatureCache]]:
+        return [s.cache for s in self.slots]
+
+    @property
+    def cache_hit_rate(self) -> float:
+        hits = sum(c.stats.hits for c in self.caches if c is not None)
+        total = hits + sum(c.stats.misses for c in self.caches
+                           if c is not None)
+        return hits / total if total else 0.0
+
+    def model_bytes(self, stats: PipelineStats) -> float:
+        act_factor = max(3.0 * self.cfg.hidden * self.cfg.num_layers
+                         / max(self.cfg.feat_dim, 1), 1.0)
+        return 3 * param_bytes(self.decls) + stats.peak_batch_bytes * act_factor
+
+    @staticmethod
+    def runtime_bytes() -> float:
+        return RUNTIME_BYTES
+
+    def modeled_memory(self, stats: PipelineStats,
+                       mode: Optional[str] = None,
+                       workers: Optional[int] = None) -> float:
+        """Fleet footprint: every partition replicates model + runtime and
+        owns its cache/batches, so the Eq. 3/5 per-worker term × partitions."""
+        cache_bytes = max((c.volume_bytes() for c in self.caches
+                           if c is not None), default=0.0)
+        mt = MemoryTerms(cache_bytes=cache_bytes,
+                         batch_bytes=max(stats.peak_batch_bytes, 1),
+                         model_bytes=self.model_bytes(stats),
+                         runtime_bytes=RUNTIME_BYTES)
+        mode = mode or self.cfg.parallel_mode
+        workers = workers if workers is not None else self.cfg.workers
+        per_part = {"mode1": lambda t: memory_mode1(t, workers),
+                    "mode2": lambda t: memory_mode2(t, workers),
+                    "seq": memory_seq}[mode](mt)
+        return per_part * self.plan.parts
+
+    def predicted_accuracy_drop(self) -> float:
+        cache_frac = ((self.cache.capacity / self.graph.num_nodes)
+                      if self.cache else 0.0)
+        return accuracy_drop_model(self.eta, self.cfg.bias_rate,
+                                   self.full_graph.density(), cache_frac)
+
+    # ------------------------------------------------------------------
+    def apply_live_config(self, knobs: Dict,
+                          pipe: Optional[MultiPipeline] = None):
+        """Episode-boundary reconfiguration, fanned out to every partition
+        (same contract as ``A3GNNTrainer.apply_live_config``; the
+        ``partitions`` knob itself needs the restart path instead)."""
+        updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
+                                         "parallel_mode", "workers",
+                                         "batch_size") if k in knobs}
+        if "workers" in updates:
+            updates["workers"] = int(updates["workers"])
+        if "batch_size" in updates:
+            updates["batch_size"] = int(updates["batch_size"])
+        self.cfg = self.cfg.replace(**updates)
+        for slot in self.slots:
+            if "cache_volume_mb" in updates:
+                vol = float(updates["cache_volume_mb"])
+                if vol <= 0:
+                    slot.cache = None
+                elif slot.cache is None:
+                    slot.cache = FeatureCache(slot.graph, vol,
+                                              self.cfg.cache_policy,
+                                              self.seed + slot.index)
+                else:
+                    slot.cache.resize(vol)
+            if "cache_volume_mb" in updates or "bias_rate" in updates:
+                slot.weight_fn = (bias_weight_fn(slot.cache,
+                                                 self.cfg.bias_rate)
+                                  if (slot.cache is not None
+                                      and self.cfg.bias_rate > 1.0) else None)
+        if pipe is not None:
+            pipe.reconfigure(mode=updates.get("parallel_mode"),
+                             workers=updates.get("workers"),
+                             batch_size=updates.get("batch_size"))
+
+    def fit_autotuned(self, autotune=None, seed: Optional[int] = None):
+        """Online auto-tuning over the partition fleet (paper §III-C); with
+        ``autotune.max_partitions > 1`` the controller also tunes the
+        partition count through the checkpoint → rebuild → restore path."""
+        from repro.core.autotune.controller import AutotuneController
+        acfg = autotune or self.cfg.autotune
+        if seed is not None:
+            acfg = acfg.replace(seed=seed)
+        ctrl = AutotuneController(self, self.make_pipeline(), acfg)
+        try:
+            report = ctrl.run()
+            if ctrl.tr is not self:
+                # a `partitions` restart rebuilt the trainer mid-run; keep
+                # this object's params/opt state current — the rebuilt
+                # topology lives in report.final_trainer
+                self.load_state_dict(ctrl.tr.state_dict())
+            return report
+        finally:
+            ctrl.pipe.shutdown()
+
+    # ------------------------------------------------------------------
+    def evaluate(self, max_batches: int = 8) -> float:
+        """Test accuracy, averaged over per-partition held-out batches."""
+        accs = []
+        budget = max(max_batches // len(self.slots), 1)
+        for slot in self.slots:
+            if not slot.graph.test_mask.any():
+                continue
+            sampler = NeighborSampler(slot.graph, self.cfg.fanout,
+                                      weight_fn=None,
+                                      seed=self.seed + 12345 + slot.index)
+            for i, seeds in enumerate(seed_loader(
+                    slot.graph, self.cfg.batch_size, self.seed,
+                    mask=slot.graph.test_mask)):
+                if i >= budget:
+                    break
+                mb = generate_batch(sampler.sample(seeds), None, slot.graph)
+                arrays = batch_device_arrays(mb)
+                accs.append(float(self._eval(self.params, arrays["features"],
+                                             arrays["neigh_idxs"],
+                                             arrays["labels"])))
+        return float(np.mean(accs)) if accs else 0.0
+
+    # ------------------------------------------------------------------
+    # checkpoint / restore — TrainerCheckpointMixin provides state_dict /
+    # load_state_dict / save / restore (+ the partition-count guard)
+    # ------------------------------------------------------------------
+    def checkpoint_extra(self) -> Dict:
+        """Manifest payload: topology + per-partition cache accounting, so a
+        restore resumes with hit/miss history (and the restart path can
+        verify what it is migrating)."""
+        return {**super().checkpoint_extra(),
+                "partition_method": self.plan.method,
+                "cache_stats": [dataclasses.asdict(s.cache.stats)
+                                if s.cache is not None else None
+                                for s in self.slots]}
+
+    def _after_restore(self, extra: Dict, step: int):
+        self.global_steps = int(extra.get("global_steps", step))
+        # cache hit-accounting carries over only on a same-topology restore
+        # (after a migration the per-partition caches are new objects)
+        if int(extra.get("partitions", self.plan.parts)) == self.plan.parts:
+            for slot, st in zip(self.slots, extra.get("cache_stats") or []):
+                if slot.cache is not None and st:
+                    for k, v in st.items():
+                        setattr(slot.cache.stats, k, int(v))
+
+    def fit_supervised(self, steps: int, ckpt_dir, ckpt_every: int = 0,
+                       max_restarts: int = 3,
+                       fail_at_step: Optional[int] = None
+                       ) -> SupervisorReport:
+        """Train ``steps`` global steps under the fault-tolerance supervisor:
+        periodic checkpoints, restore-and-resume on failure
+        (``fail_at_step`` injects one for tests)."""
+        ckpt = CheckpointManager(ckpt_dir, keep=2, async_save=False)
+        sup = TrainSupervisor(ckpt, ckpt_every or max(steps // 2, 1),
+                              max_restarts, extra_fn=self.checkpoint_extra)
+        injected = {"armed": fail_at_step is not None}
+
+        def step_fn(state, step):
+            self.load_state_dict(state)      # supervisor may have restored
+            if injected["armed"] and step == fail_at_step:
+                injected["armed"] = False
+                raise RuntimeError(f"injected node failure at step {step}")
+            self.global_step()
+            return self.state_dict()
+
+        state, rep = sup.run(self.state_dict(), step_fn, steps)
+        self.load_state_dict(state)
+        return rep

@@ -30,7 +30,6 @@ controller's drain → reconfigure → resume contract):
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
 import time
@@ -41,7 +40,7 @@ import numpy as np
 
 from repro.core.cache import FeatureCache
 from repro.core.sampling import NeighborSampler, MiniBatch, seed_loader
-from repro.graph.batch import generate_batch, batch_device_arrays, batch_bytes
+from repro.graph.batch import generate_batch, batch_bytes
 
 _UNSET = object()
 

@@ -14,9 +14,8 @@ fanout padding (static shapes → jit-friendly training batches).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 

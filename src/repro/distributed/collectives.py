@@ -7,7 +7,6 @@ sequence-sharded KV cache instead of combining partial softmaxes).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +56,51 @@ def flash_decode_attention(mesh: Mesh, axis: str = "model"):
     in_specs = (P(), P(None, axis, None, None), P(None, axis, None, None), P())
     return shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(),
                      check_rep=False)
+
+
+def grad_allreduce(mesh, axis: str = "part"):
+    """Mean-all-reduce over per-partition gradient pytrees (data-parallel
+    GNN scale-out, core/multipart.py).
+
+    Returns ``fn(trees) -> tree`` averaging a list of identically-structured
+    gradient pytrees, one per partition.  On a real ``Mesh`` each leaf is
+    stacked over ``axis`` and reduced with a shard_map psum (the collective
+    that runs on hardware); on a ``HostSimMesh`` (CI: fewer devices than
+    partitions) the same reduction happens as host-side tree arithmetic —
+    bitwise the same mean, no device topology required.
+    """
+    from repro.launch.mesh import HostSimMesh
+
+    if isinstance(mesh, HostSimMesh) or mesh is None:
+        def host_mean(trees):
+            n = float(len(trees))
+            if len(trees) == 1:
+                return trees[0]
+            return jax.tree.map(lambda *xs: sum(xs) / n, *trees)
+        return host_mean
+
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def local(x):
+        return jax.lax.psum(x, axis) / axis_size
+
+    # built ONCE per grad_allreduce call; jit caches per gradient-tree
+    # structure, so the per-step cost is a single dispatch, not a retrace
+    reduce_leaf = shard_map(local, mesh=mesh, in_specs=P(axis),
+                            out_specs=P(axis), check_rep=False)
+
+    @jax.jit
+    def tree_mean(stacked):
+        # every shard holds the mean after the psum; take shard 0's copy
+        return jax.tree.map(lambda s: reduce_leaf(s)[0], stacked)
+
+    def mesh_mean(trees):
+        if len(trees) != axis_size:
+            raise ValueError(f"got {len(trees)} gradient trees for a "
+                             f"{axis_size}-way '{axis}' mesh axis")
+        return tree_mean(jax.tree.map(lambda *xs: jnp.stack(xs), *trees))
+
+    return mesh_mean
 
 
 def quantized_allreduce_bytes(shape, n_devices: int, bits: int = 8) -> float:

@@ -9,7 +9,6 @@ shard_map gives the usual 1F1B-equivalent memory behaviour under remat.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -18,12 +18,12 @@ This module resolves them against a concrete mesh, per architecture:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.params import tree_map_decls, ParamDecl
+from repro.models.params import ParamDecl
 
 
 def make_rules(cfg, mesh: Mesh) -> Dict[str, Any]:

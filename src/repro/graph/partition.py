@@ -1,14 +1,20 @@
-"""Graph partitioning (Algo. 1 line 2) — hash and BFS-grown partitions.
+"""Graph partitioning (Algo. 1 line 2) — hash, BFS-grown and locality-aware.
 
 Each GPU/TPU worker trains on its own partition (the paper's no-NVLink
 setting: no remote feature access, accepted accuracy cost modeled by the
-η term of Eq. (1))."""
+η term of Eq. (1)).  The scale-out path (core/multipart.py) consumes a
+``PartitionPlan`` — the assignment plus the cut/halo statistics that the
+locality objective minimizes: a *halo node* of partition p is a node
+owned elsewhere but adjacent to p, i.e. exactly the features p would
+have to fetch remotely (HitGNN's inter-device traffic term)."""
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import List
 
 import numpy as np
 
+from repro.core.locality import edge_locality_score
 from repro.graph.storage import Graph
 
 
@@ -53,14 +59,131 @@ def bfs_partition(g: Graph, parts: int, seed: int = 0) -> List[np.ndarray]:
     return [np.where(owner == p)[0].astype(np.int32) for p in range(parts)]
 
 
+def locality_partition(g: Graph, parts: int, seed: int = 0) -> List[np.ndarray]:
+    """Affinity-ordered growth: admit the frontier node with the most
+    neighbors already inside the partition (maximum internal affinity ⇒
+    minimum new halo).  Seeds are the hottest nodes (degree order), so each
+    partition starts from a hub of its own community — the same hotness
+    signal the static cache policy uses (core/cache.py).
+
+    Per-partition frontiers are max-heaps with lazy invalidation (stale
+    entries are skipped when popped), so the whole growth is
+    O(E log E) rather than a per-admission scan over all nodes."""
+    import heapq
+    n = g.num_nodes
+    if parts <= 1:
+        return [np.arange(n, dtype=np.int32)]
+    owner = -np.ones(n, np.int32)
+    target = n // parts + 1
+    sizes = np.zeros(parts, np.int64)
+    # affinity[p][v] = #neighbors of v already owned by p (current score);
+    # heaps hold (-affinity_at_push, v) — stale when affinity moved on
+    affinity = np.zeros((parts, n), np.int32)
+    heaps: List[list] = [[] for _ in range(parts)]
+
+    def absorb(p: int, v: int):
+        owner[v] = p
+        sizes[p] += 1
+        for u in g.neighbors(v):
+            if owner[u] < 0:
+                affinity[p, u] += 1
+                heapq.heappush(heaps[p], (-int(affinity[p, u]), int(u)))
+
+    hot = g.hotness_order()
+    rng = np.random.default_rng(seed)
+    for p, v in enumerate(hot[:parts]):
+        absorb(p, int(v))
+    stalled = np.zeros(parts, bool)
+    while not stalled.all():
+        for p in range(parts):
+            if stalled[p]:
+                continue
+            if sizes[p] >= target:
+                stalled[p] = True
+                continue
+            v = -1
+            while heaps[p]:
+                neg_a, cand = heapq.heappop(heaps[p])
+                if owner[cand] < 0 and -neg_a == affinity[p, cand]:
+                    v = cand
+                    break
+            if v < 0:
+                stalled[p] = True
+                continue
+            absorb(p, v)
+    # leftovers (disconnected or capped out): hash onto the smallest parts
+    for v in np.where(owner < 0)[0]:
+        p = int(np.argmin(sizes + rng.random(parts)))   # random tie-break
+        owner[v] = p
+        sizes[p] += 1
+    return [np.where(owner == p)[0].astype(np.int32) for p in range(parts)]
+
+
+_METHODS = {"hash": hash_partition, "bfs": bfs_partition,
+            "locality": locality_partition}
+
+
+@dataclass
+class PartitionPlan:
+    """A partition assignment plus the statistics the scale-out path and
+    the Eq. (1) accuracy model consume."""
+    node_sets: List[np.ndarray]
+    owner: np.ndarray               # (N,) int32 node → partition
+    method: str
+    subgraphs: List[Graph] = field(default_factory=list)
+    cut_edges: int = 0              # edges crossing a partition boundary
+    halo_counts: List[int] = field(default_factory=list)
+
+    @property
+    def parts(self) -> int:
+        return len(self.node_sets)
+
+    def etas(self, full: Graph) -> List[float]:
+        """Per-partition η = |Vs_i| / |V| of Eq. (1)."""
+        return [len(ns) / max(full.num_nodes, 1) for ns in self.node_sets]
+
+    def edge_locality(self, full: Graph) -> float:
+        """Fraction of edges kept inside a partition (1 − cut ratio)."""
+        return 1.0 - self.cut_edges / max(full.num_edges, 1)
+
+
+def plan_partitions(g: Graph, parts: int, method: str = "locality",
+                    seed: int = 0) -> PartitionPlan:
+    """Build the full plan: assignment, induced subgraphs, cut/halo stats."""
+    if method not in _METHODS:
+        raise ValueError(f"unknown partition method {method!r}; "
+                         f"expected one of {sorted(_METHODS)}")
+    node_sets = _METHODS[method](g, max(parts, 1), seed)
+    owner = -np.ones(g.num_nodes, np.int32)
+    for p, ns in enumerate(node_sets):
+        owner[ns] = p
+    src = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    cross = owner[src] != owner[g.indices]
+    cut = int(cross.sum())
+    halo = []
+    for p in range(len(node_sets)):
+        # nodes outside p adjacent to p (either edge direction)
+        out_nb = g.indices[cross & (owner[src] == p)]
+        in_src = src[cross & (owner[g.indices] == p)]
+        halo.append(int(len(np.unique(np.concatenate([out_nb, in_src])))))
+    return PartitionPlan(node_sets=node_sets, owner=owner, method=method,
+                         subgraphs=[g.subgraph(ns) for ns in node_sets],
+                         cut_edges=cut, halo_counts=halo)
+
+
 def partition(g: Graph, parts: int, method: str = "bfs",
               seed: int = 0) -> List[Graph]:
     if parts <= 1:
         return [g]
-    node_sets = (bfs_partition if method == "bfs" else hash_partition)(g, parts, seed)
+    node_sets = _METHODS[method](g, parts, seed)
     return [g.subgraph(ns) for ns in node_sets]
 
 
 def overlap_ratio(part: Graph, full: Graph) -> float:
     """η = |Vs_i| / |V| of Eq. (1)."""
     return part.num_nodes / max(full.num_nodes, 1)
+
+
+__all__ = ["hash_partition", "bfs_partition", "locality_partition",
+           "PartitionPlan", "plan_partitions", "partition", "overlap_ratio",
+           "edge_locality_score"]

@@ -6,9 +6,7 @@ Degree ("hotness") statistics drive the static cache policy (PaGraph-style).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -9,7 +9,6 @@ class-conditional Gaussians (so a GNN actually learns).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 

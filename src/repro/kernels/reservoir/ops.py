@@ -5,7 +5,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.reservoir.kernel import reservoir_topm_pallas
 from repro.kernels.reservoir.ref import reservoir_topm_ref

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the reservoir top-m kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 NEG = -3.0e38

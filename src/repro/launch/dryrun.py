@@ -38,11 +38,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs, SHAPES_BY_NAME, applicable_shapes
 from repro.models.api import build
-from repro.models.params import abstract_params, param_count, param_bytes
+from repro.models.params import abstract_params, param_count
 from repro.models.unroll import force_unroll
 from repro.distributed.sharding import (physical_specs, shardings_of, make_rules,
                                         resolve_spec, shard_ctx, enforce_divisible)
-from repro.launch.mesh import make_production_mesh, HW
+from repro.launch.mesh import make_production_mesh
 from repro.launch.xla_compat import cost_analysis_dict
 from repro.train.trainer import make_train_step
 from repro.train.optimizer import get_optimizer

@@ -7,7 +7,12 @@ DCN — pure data parallelism with optional gradient compression).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,6 +24,40 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests (axis names preserved)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@dataclass(frozen=True)
+class HostSimMesh:
+    """Host-simulated device mesh for the multi-partition GNN path.
+
+    When the process has fewer devices than partitions (the 1-CPU CI
+    container), collectives cannot run as real shard_map programs; this
+    stand-in carries the same (axis name, size) topology so the rest of the
+    stack — distributed/collectives.grad_allreduce, core/multipart.py — is
+    written against one mesh API and swaps in real devices transparently.
+    """
+    size: int
+    axis: str = "part"
+
+    @property
+    def axis_names(self):
+        return (self.axis,)
+
+    @property
+    def shape(self):
+        return {self.axis: self.size}
+
+
+def make_partition_mesh(num_partitions: int, axis: str = "part"):
+    """1-D mesh over the data-parallel GNN partitions.
+
+    Real ``Mesh`` over the first ``num_partitions`` devices when the host
+    has enough of them; ``HostSimMesh`` otherwise (CI: 1 CPU device, any
+    partition count)."""
+    devices = jax.devices()
+    if num_partitions <= len(devices):
+        return Mesh(np.asarray(devices[:num_partitions]), (axis,))
+    return HostSimMesh(num_partitions, axis)
 
 
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.

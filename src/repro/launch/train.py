@@ -34,8 +34,36 @@ def _tpu_xla_flags():
         " --xla_enable_async_all_gather=true")
 
 
+def run_gnn_multipartition(args, cfg, graph):
+    """Scale-out GNN path: locality-partitioned data parallelism under the
+    fault-tolerance supervisor, with a restart-path restore proof."""
+    from repro.core.a3gnn import make_trainer
+    from repro.train.checkpoint import CheckpointManager
+
+    tr = make_trainer(graph, cfg, seed=args.seed)
+    plan = tr.plan
+    print(f"[partition] {plan.parts} partitions ({plan.method}): "
+          f"sizes={[len(ns) for ns in plan.node_sets]} "
+          f"edge_locality={plan.edge_locality(graph):.3f} "
+          f"halo={plan.halo_counts}")
+    ckpt_dir = args.ckpt_dir or f"/tmp/ckpt_gnn_p{cfg.partitions}"
+    rep = tr.fit_supervised(args.steps, ckpt_dir,
+                            ckpt_every=max(args.steps // 2, 1))
+    acc = tr.evaluate()
+    print(f"[result] {rep.steps_run} global steps "
+          f"({rep.steps_run * plan.parts} partition mini-batches), "
+          f"checkpoints={rep.checkpoints} acc={acc:.4f} "
+          f"cache_hit={tr.cache_hit_rate:.3f}")
+    # restart-path proof: rebuild a fresh trainer and restore the committed
+    # checkpoint (the same machinery the autotune `partitions` knob uses)
+    tr2 = make_trainer(graph, cfg, seed=args.seed)
+    step = tr2.restore(CheckpointManager(ckpt_dir, async_save=False))
+    print(f"[restore] fresh trainer restored from step {step} "
+          f"(global_steps={tr2.global_steps}) acc={tr2.evaluate():.4f}")
+    return 0
+
+
 def run_gnn(args):
-    import numpy as np
     from repro.configs import get_config
     from repro.graph.synthetic import dataset_like
     from repro.core.a3gnn import A3GNNTrainer, apply_baseline
@@ -45,10 +73,14 @@ def run_gnn(args):
         cfg = cfg.replace(parallel_mode=args.mode)
     if args.bias_rate is not None:
         cfg = cfg.replace(bias_rate=args.bias_rate)
+    if args.partitions is not None:
+        cfg = cfg.replace(partitions=args.partitions)
     cfg = apply_baseline(cfg, args.baseline)
     graph = dataset_like(cfg, seed=args.seed)
     print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
           f"{graph.num_edges} edges")
+    if cfg.partitions > 1:
+        return run_gnn_multipartition(args, cfg, graph)
     tr = A3GNNTrainer(graph, cfg, seed=args.seed)
     if args.autotune:
         acfg = cfg.autotune.replace(episodes=args.episodes_autotune,
@@ -85,7 +117,6 @@ def run_gnn(args):
 def run_lm(args):
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.configs import get_config
     from repro.models.api import build
     from repro.models.params import init_params
@@ -145,6 +176,9 @@ def main():
     ap.add_argument("--mode", default=None,
                     choices=[None, "seq", "mode1", "mode2"])
     ap.add_argument("--bias-rate", type=float, default=None)
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="data-parallel graph partitions (scale-out path; "
+                         "host-simulated mesh when devices < partitions)")
     ap.add_argument("--autotune", action="store_true",
                     help="run the online auto-tuning controller (§III-C)")
     ap.add_argument("--episodes-autotune", type=int, default=4)

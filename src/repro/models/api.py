@@ -14,9 +14,8 @@
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 from repro.models.unroll import scan as uscan
@@ -29,7 +28,7 @@ from repro.models import transformer as T
 from repro.models import ssm as SSM
 from repro.models import hybrid as HY
 from repro.models import encdec as ED
-from repro.models.params import ParamDecl, decl, abstract_params
+from repro.models.params import ParamDecl, abstract_params
 from repro.distributed.sharding import constrain
 
 VISION_PREFIX = 1024  # stubbed patch-embedding prefix length (vlm prefill/train)

@@ -7,9 +7,7 @@ learned positional embeddings, pre-LN layernorm + GELU MLP — is real.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
-import jax
 from repro.models.unroll import scan as uscan
 import jax.numpy as jnp
 

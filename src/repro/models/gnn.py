@@ -8,7 +8,7 @@ so jit recompiles only a handful of times.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +129,34 @@ def make_train_step(cfg, opt):
         return params, opt_state, loss, acc
 
     return step
+
+
+def make_grad_fn(cfg):
+    """jit-able gradient step WITHOUT the optimizer update — the
+    multi-partition path (core/multipart.py) averages gradients across
+    partitions before applying a single shared update."""
+
+    @jax.jit
+    def gfn(params, features, neigh_idxs, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, features, neigh_idxs, labels, cfg),
+            has_aux=True)(params)
+        return grads, loss, acc
+
+    return gfn
+
+
+def make_apply_fn(cfg, opt):
+    """jit-able optimizer application for pre-averaged gradients."""
+
+    @jax.jit
+    def apply(params, opt_state, grads):
+        updates, opt_state = opt.update(grads, opt_state, params, cfg.lr)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                              updates)
+        return params, opt_state
+
+    return apply
 
 
 def make_eval_fn(cfg):

@@ -12,7 +12,6 @@ application.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 from repro.models.unroll import scan as uscan
@@ -20,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import ssm as S
-from repro.models.params import ParamDecl, decl
+from repro.models.params import ParamDecl
 from repro.models.transformer import stack_decls, _remat, _cdt
 from repro.distributed.sharding import constrain
 

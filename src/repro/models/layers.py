@@ -12,13 +12,11 @@ in sync.  Attention supports:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 from repro.models.unroll import scan as uscan
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.params import decl
 from repro.distributed.sharding import constrain

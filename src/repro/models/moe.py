@@ -21,7 +21,7 @@ Router runs in f32.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ Heads are sharded over the ``tp`` axis; B/C (state projections) replicated.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 from repro.models.unroll import scan as uscan

@@ -13,8 +13,6 @@ Step functions (built by api.py into jit-able closures):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 from repro.models.unroll import scan as uscan

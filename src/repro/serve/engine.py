@@ -9,17 +9,16 @@ unchanged on the production mesh (the dry-run's decode cells are exactly
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import build
-from repro.models.params import init_params, abstract_params
+from repro.models.params import init_params
 from repro.serve.kv_cache import KVCacheManager
 
 

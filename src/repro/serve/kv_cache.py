@@ -7,12 +7,9 @@ requests release their row, new prompts prefill into it.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import json
 import os
-import re
 import shutil
 import threading
 import time
@@ -138,6 +137,16 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """Manifest of a committed step (tree metadata + the ``extra`` dict
+        the writer attached — e.g. partition topology and cache accounting
+        for the multi-partition GNN restore path)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        return json.loads(
+            (self.dir / f"step_{step:09d}" / "MANIFEST.json").read_text())
+
     # ------------------------------------------------------------------
     def restore(self, template: Dict[str, Any], step: Optional[int] = None,
                 shardings: Optional[Dict[str, Any]] = None
@@ -188,3 +197,55 @@ def _lookup_named(tree, name: str):
         else:
             node = node[part]
     return node
+
+
+class TrainerCheckpointMixin:
+    """Shared checkpoint/restore contract for the GNN trainers (single- and
+    multi-partition, core/a3gnn.py and core/multipart.py).
+
+    Expects ``self.params``, ``self.opt_state`` and ``self.cfg.partitions``;
+    subclasses extend ``checkpoint_extra`` (manifest payload) and
+    ``_after_restore`` (e.g. cache hit-accounting).  A checkpoint written
+    under a different partition count is REJECTED unless the caller
+    explicitly acknowledges the migration (``expect_partitions`` = the
+    saved count — the autotune restart path does exactly that after
+    rebuilding the trainer)."""
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+
+    def checkpoint_extra(self) -> Dict[str, Any]:
+        return {"partitions": int(self.cfg.partitions),
+                "global_steps": int(getattr(self, "global_steps", 0))}
+
+    def save(self, ckpt: "CheckpointManager", step: Optional[int] = None):
+        ckpt.save(step if step is not None
+                  else int(getattr(self, "global_steps", 0)),
+                  self.state_dict(), extra=self.checkpoint_extra())
+
+    def restore(self, ckpt: "CheckpointManager", step: Optional[int] = None,
+                expect_partitions: Optional[int] = None) -> int:
+        step = step if step is not None else ckpt.latest_step()
+        extra = ckpt.read_manifest(step).get("extra") or {}
+        saved_parts = extra.get("partitions")
+        want = (expect_partitions if expect_partitions is not None
+                else int(self.cfg.partitions))
+        if saved_parts is not None and int(saved_parts) != int(want):
+            raise ValueError(
+                f"checkpoint step {step} was written with "
+                f"partitions={saved_parts}, but this trainer runs "
+                f"partitions={self.cfg.partitions}; rebuild the trainer "
+                f"with partitions={saved_parts}, or pass "
+                f"expect_partitions={saved_parts} to migrate through the "
+                f"restart path (checkpoint → rebuild → restore)")
+        state, step = ckpt.restore(self.state_dict(), step)
+        self.load_state_dict(state)
+        self._after_restore(extra, step)
+        return step
+
+    def _after_restore(self, extra: Dict[str, Any], step: int):
+        pass

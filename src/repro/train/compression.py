@@ -14,8 +14,7 @@ axis, cutting DCN bytes ~4× at the cost of one extra max-reduce for scales.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

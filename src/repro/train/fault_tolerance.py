@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -125,10 +125,14 @@ class TrainSupervisor:
     """
 
     def __init__(self, ckpt: CheckpointManager, ckpt_every: int = 10,
-                 max_restarts: int = 3):
+                 max_restarts: int = 3,
+                 extra_fn: Optional[Callable[[], Dict]] = None):
         self.ckpt = ckpt
         self.every = ckpt_every
         self.max_restarts = max_restarts
+        # attached to every checkpoint manifest (e.g. the multi-partition
+        # trainer records its partition topology + cache hit accounting)
+        self.extra_fn = extra_fn
 
     def run(self, state: Dict[str, Any], step_fn: Callable[[Dict, int], Dict],
             n_steps: int, start_step: int = 0,
@@ -142,7 +146,9 @@ class TrainSupervisor:
                 rep.steps_run += 1
                 step += 1
                 if step % self.every == 0 or step == n_steps:
-                    self.ckpt.save(step, state)
+                    self.ckpt.save(step, state,
+                                   extra=(self.extra_fn()
+                                          if self.extra_fn else None))
                     rep.checkpoints += 1
             except Exception:  # noqa: BLE001 — node failure path
                 rep.failures += 1

@@ -12,13 +12,12 @@ option that fits a 1T-param model on 256 chips (see kimi-k2 config).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.params import ParamDecl, tree_map_decls, abstract_params
+from repro.models.params import ParamDecl, tree_map_decls
 
 
 def _mirror(d: ParamDecl, dtype=jnp.float32) -> ParamDecl:

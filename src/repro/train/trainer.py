@@ -7,7 +7,7 @@ cross-pod gradient-compression hook live here too.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

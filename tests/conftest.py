@@ -1,4 +1,3 @@
-import os
 import sys
 from pathlib import Path
 
@@ -8,15 +7,10 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-import numpy as np
 import pytest
 
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "slow: long pipeline/system tests — excluded from the fast lane "
-        "(scripts/ci.sh runs them in the full tier-1 pass)")
+# the `slow` marker is registered in pyproject.toml ([tool.pytest.ini_options])
+# so `pytest --strict-markers` passes without conftest-side registration
 
 
 @pytest.fixture(scope="session")

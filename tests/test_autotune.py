@@ -1,13 +1,12 @@
 """Auto-tuning: design space, surrogate R², PPO vs grid, Pareto props."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.autotune.space import Space, design_space
+from repro.core.autotune.space import Space
 from repro.core.autotune.surrogate import Surrogate, GBDT, Ridge, r2_score
 from repro.core.autotune.ppo import PPOAgent, PPOConfig, VIOLATION_REWARD
 from repro.core.autotune.pareto import (pareto_front, select_endpoints,
-                                        grid_search, front_from_history)
+                                        grid_search)
 
 
 # ---------------------------------------------------------------------------

@@ -6,13 +6,12 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.configs.gnn import AutotuneConfig, gnn_config
+from repro.configs.gnn import AutotuneConfig
 from repro.core.a3gnn import A3GNNTrainer
 from repro.core.autotune.controller import (AutotuneController,
                                             AutotuneReport, Episode,
                                             episode_space)
 from repro.core.cache import FeatureCache
-from repro.core.locality import bias_weight_fn
 from repro.core.pipeline import Pipeline
 from repro.core.sampling import seed_loader
 

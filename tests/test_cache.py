@@ -1,6 +1,5 @@
 """Feature cache: policies, device map consistency, hit accounting."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.cache import FeatureCache

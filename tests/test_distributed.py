@@ -1,14 +1,12 @@
 """Multi-device tests (subprocess with 8 forced host devices): sharding
 rules, pipeline parallelism, flash-decoding combine, compressed psum,
 cost-analysis calibration."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P
@@ -33,8 +31,7 @@ def run_py(code: str, devices: int = 8, timeout: int = 360) -> str:
 
 def test_rules_divisibility(smoke_graph):
     import jax
-    from repro.distributed.sharding import (make_rules, resolve_spec,
-                                            enforce_divisible)
+    from repro.distributed.sharding import make_rules, enforce_divisible
     from repro.configs import get_config
     mesh = jax.make_mesh((1, 1), ("data", "model"))
 
@@ -63,7 +60,7 @@ def test_physical_specs_all_archs_divide():
     from repro.distributed.sharding import physical_specs, _axis_size
     from repro.configs import get_config, list_archs
     from repro.models.api import build
-    from repro.models.params import tree_map_decls, ParamDecl
+    from repro.models.params import ParamDecl
     import jax
 
     class FakeMesh:

@@ -7,7 +7,7 @@ import pytest
 from repro.core.a3gnn import A3GNNTrainer
 from repro.core.sampling import NeighborSampler
 from repro.graph.batch import generate_batch, batch_device_arrays
-from repro.models.gnn import decls_gnn, gnn_forward, gnn_loss, _mean_agg
+from repro.models.gnn import decls_gnn, gnn_forward, _mean_agg
 from repro.models.params import init_params
 from repro.kernels.segment_agg.ops import neighbor_mean
 

@@ -1,9 +1,7 @@
 """Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.kernels.reservoir.ops import reservoir_topm
 from repro.kernels.gather.ops import cache_gather

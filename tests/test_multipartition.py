@@ -1,0 +1,323 @@
+"""Multi-partition data-parallel GNN training (core/multipart.py).
+
+Covers: locality-aware partition assignment, the partition mesh +
+grad_allreduce collective (host-sim and real single-device mesh),
+gradient parity of the 2-partition synced step vs the single-partition
+step, checkpoint → rebuild → restore round-trips (incl. cache
+hit-accounting and the partition-count guard), fault-tolerance
+integration, and the autotune `partitions` knob's restart path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.gnn import AutotuneConfig
+from repro.core.a3gnn import A3GNNTrainer, make_trainer
+from repro.core.autotune.controller import AutotuneController, episode_space
+from repro.core.locality import edge_locality_score
+from repro.core.multipart import MultiPartitionTrainer, MultiPipeline
+from repro.core.sampling import NeighborSampler, seed_loader
+from repro.distributed.collectives import grad_allreduce
+from repro.graph.batch import generate_batch, batch_device_arrays
+from repro.graph.partition import (bfs_partition, hash_partition,
+                                   locality_partition, plan_partitions)
+from repro.launch.mesh import HostSimMesh, make_partition_mesh
+from repro.train.checkpoint import CheckpointManager
+
+
+# ---------------------------------------------------------------------------
+# locality-aware partitioning
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("parts", [1, 2, 3, 4])
+def test_locality_partition_is_a_balanced_cover(smoke_graph, parts):
+    sets = locality_partition(smoke_graph, parts, seed=0)
+    assert len(sets) == parts
+    allv = np.concatenate(sets)
+    assert len(allv) == smoke_graph.num_nodes          # disjoint cover
+    assert len(np.unique(allv)) == smoke_graph.num_nodes
+    sizes = np.array([len(s) for s in sets])
+    assert sizes.min() >= 0.5 * smoke_graph.num_nodes / parts  # balanced-ish
+
+
+def test_locality_partition_beats_hash_and_bfs_on_cut(smoke_graph):
+    """The locality objective: keep more edges internal than either
+    baseline assigner (fewer halo fetches, larger effective η)."""
+    def score(sets):
+        owner = -np.ones(smoke_graph.num_nodes, np.int32)
+        for p, ns in enumerate(sets):
+            owner[ns] = p
+        return edge_locality_score(smoke_graph, owner)
+
+    loc = score(locality_partition(smoke_graph, 4, seed=0))
+    assert loc > score(hash_partition(smoke_graph, 4, seed=0))
+    assert loc > score(bfs_partition(smoke_graph, 4, seed=0))
+
+
+def test_partition_plan_stats(smoke_graph):
+    plan = plan_partitions(smoke_graph, 3, "locality", seed=0)
+    assert plan.parts == 3
+    assert len(plan.subgraphs) == 3
+    assert abs(sum(plan.etas(smoke_graph)) - 1.0) < 1e-9
+    assert 0.0 <= plan.edge_locality(smoke_graph) <= 1.0
+    assert all(h >= 0 for h in plan.halo_counts)
+    # owner array consistent with node sets
+    for p, ns in enumerate(plan.node_sets):
+        assert (plan.owner[ns] == p).all()
+    with pytest.raises(ValueError, match="unknown partition method"):
+        plan_partitions(smoke_graph, 2, "metis")
+
+
+# ---------------------------------------------------------------------------
+# partition mesh + gradient collective
+# ---------------------------------------------------------------------------
+
+def test_partition_mesh_host_simulated_when_devices_scarce():
+    n_dev = len(jax.devices())
+    mesh = make_partition_mesh(n_dev + 1)
+    assert isinstance(mesh, HostSimMesh)
+    assert mesh.shape == {"part": n_dev + 1}
+    assert mesh.axis_names == ("part",)
+    real = make_partition_mesh(1)                   # always enough for 1
+    assert not isinstance(real, HostSimMesh)
+
+
+def _tree(scale):
+    return {"w": np.full((3, 2), scale, np.float32),
+            "b": {"v": np.full((4,), 2.0 * scale, np.float32)}}
+
+
+def test_grad_allreduce_host_sim_means_trees():
+    fn = grad_allreduce(HostSimMesh(2))
+    mean = fn([_tree(1.0), _tree(3.0)])
+    np.testing.assert_allclose(mean["w"], 2.0)
+    np.testing.assert_allclose(mean["b"]["v"], 4.0)
+
+
+def test_grad_allreduce_real_mesh_single_device():
+    """The shard_map psum path on a real 1-device mesh must agree with the
+    host-sim arithmetic (same collective, different substrate)."""
+    mesh = make_partition_mesh(1)
+    out = grad_allreduce(mesh)([_tree(5.0)])
+    np.testing.assert_allclose(np.asarray(out["w"]), 5.0)
+    np.testing.assert_allclose(np.asarray(out["b"]["v"]), 10.0)
+    with pytest.raises(ValueError, match="gradient trees"):
+        grad_allreduce(mesh)([_tree(1.0), _tree(2.0)])
+
+
+# ---------------------------------------------------------------------------
+# gradient parity: 2-partition synced step == single-partition step
+# ---------------------------------------------------------------------------
+
+def test_two_partition_step_matches_single_partition(smoke_graph,
+                                                     smoke_gnn_cfg):
+    """Acceptance: on the same synthetic graph and the same mini-batch, the
+    2-partition synchronized update (grad → all-reduce → shared apply)
+    matches the single-partition fused train step to ≤ 1e-5."""
+    single = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    multi = make_trainer(smoke_graph, smoke_gnn_cfg.replace(partitions=2),
+                         seed=0)
+    assert isinstance(multi, MultiPartitionTrainer)
+    multi.load_state_dict(single.state_dict())      # identical start point
+
+    sampler = NeighborSampler(smoke_graph, smoke_gnn_cfg.fanout, seed=7)
+    seeds = next(seed_loader(smoke_graph, smoke_gnn_cfg.batch_size, 7))
+    mb = generate_batch(sampler.sample(seeds), None, smoke_graph)
+    arrays = batch_device_arrays(mb)
+
+    p1, _, _, _ = single._step(single.params, single.opt_state,
+                               arrays["features"], arrays["neigh_idxs"],
+                               arrays["labels"])
+    multi.synced_update([arrays, arrays])           # both partitions: same mb
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(multi.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # and the mean over DIFFERENT batches is the true gradient mean
+    seeds2 = next(seed_loader(smoke_graph, smoke_gnn_cfg.batch_size, 8))
+    mb2 = generate_batch(sampler.sample(seeds2), None, smoke_graph)
+    arrays2 = batch_device_arrays(mb2)
+    g1, _, _ = multi._grad(multi.params, arrays["features"],
+                           arrays["neigh_idxs"], arrays["labels"])
+    g2, _, _ = multi._grad(multi.params, arrays2["features"],
+                           arrays2["neigh_idxs"], arrays2["labels"])
+    mean = multi._allreduce([g1, g2])
+    for m, a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(g1),
+                       jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(m),
+                                   (np.asarray(a) + np.asarray(b)) / 2.0,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end multi-partition training
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mp_trainer(smoke_graph, smoke_gnn_cfg):
+    return make_trainer(smoke_graph, smoke_gnn_cfg.replace(partitions=2),
+                        seed=0)
+
+
+def test_multipartition_smoke_training(mp_trainer):
+    tr = mp_trainer
+    assert len(tr.slots) == 2
+    assert all(s.cache is not None for s in tr.slots)   # per-partition cache
+    res = tr.run_epochs(1, max_steps_per_epoch=3)
+    assert res.stats.steps == 6                  # 3 global × 2 partitions
+    assert np.isfinite(res.stats.losses).all()
+    assert res.modeled_steps_s > 0 and res.memory_bytes > 0
+    assert 0.0 <= res.cache_hit_rate <= 1.0
+    # every partition produced batches through its own cache
+    assert all(s.cache.stats.hits + s.cache.stats.misses > 0
+               for s in tr.slots)
+
+
+def test_multipipeline_reconfigures_all_partitions(mp_trainer):
+    tr = mp_trainer
+    pipe = tr.make_pipeline()
+    try:
+        tr.apply_live_config({"parallel_mode": "mode2", "workers": 2,
+                              "bias_rate": 4.0}, pipe)
+        assert all(p.mode == "mode2" and p.workers_n == 2
+                   for p in pipe.pipes)
+        assert all(s.pipe.weight_fn is s.weight_fn for s in tr.slots)
+        stats = pipe.run(max_steps=2)
+        assert stats.steps == 4
+    finally:
+        pipe.shutdown()
+        tr.apply_live_config({"parallel_mode": "seq", "bias_rate": 2.0})
+
+
+def test_multipartition_worker_failure_reissued(smoke_graph, smoke_gnn_cfg):
+    # workers=1 so the injected worker deterministically receives every
+    # item and fails from its 3rd onward (fail_after=2); with 2 racing
+    # workers the failing one may never get a 3rd item
+    tr = make_trainer(smoke_graph,
+                      smoke_gnn_cfg.replace(partitions=2,
+                                            parallel_mode="mode1",
+                                            workers=1), seed=0)
+    res = tr.run_epochs(1, max_steps_per_epoch=5, fail_worker=0)
+    assert res.stats.steps == 10                 # nothing dropped
+    assert res.stats.reissued >= 3               # spare sampler took over
+
+
+# ---------------------------------------------------------------------------
+# checkpoint → rebuild → restore round-trip
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_rebuild_restore_roundtrip(smoke_graph, smoke_gnn_cfg,
+                                              tmp_path):
+    cfg = smoke_gnn_cfg.replace(partitions=2)
+    tr = make_trainer(smoke_graph, cfg, seed=0)
+    rep = tr.fit_supervised(4, tmp_path / "ckpt", ckpt_every=2)
+    assert rep.steps_run == 4 and rep.checkpoints >= 1
+    hit_stats = [dataclasses.asdict(s.cache.stats) for s in tr.slots]
+    assert any(st["hits"] + st["misses"] > 0 for st in hit_stats)
+
+    # rebuild from scratch (the restart path) and restore
+    tr2 = make_trainer(smoke_graph, cfg, seed=1)     # different init seed
+    mgr = CheckpointManager(tmp_path / "ckpt", async_save=False)
+    step = tr2.restore(mgr)
+    assert step == 4 and tr2.global_steps == 4
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(tr.opt_state),
+                    jax.tree.leaves(tr2.opt_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # cache hit-accounting survives the rebuild
+    assert [dataclasses.asdict(s.cache.stats) for s in tr2.slots] == hit_stats
+    # and training resumes
+    tr2.global_step()
+    assert tr2.global_steps == 5
+
+
+def test_restore_rejects_partition_count_change(smoke_graph, smoke_gnn_cfg,
+                                                tmp_path):
+    tr = make_trainer(smoke_graph, smoke_gnn_cfg.replace(partitions=2),
+                      seed=0)
+    mgr = CheckpointManager(tmp_path / "ckpt", async_save=False)
+    tr.save(mgr, step=1)
+    tr3 = make_trainer(smoke_graph, smoke_gnn_cfg.replace(partitions=3),
+                       seed=0)
+    with pytest.raises(ValueError, match="partitions=2"):
+        tr3.restore(mgr)
+    single = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    with pytest.raises(ValueError, match="partitions=2"):
+        single.restore(mgr)
+    # explicit migration acknowledgement goes through (the restart path)
+    step = tr3.restore(mgr, expect_partitions=2)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr3.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_supervisor_restores_multipartition_on_failure(smoke_graph,
+                                                       smoke_gnn_cfg,
+                                                       tmp_path):
+    tr = make_trainer(smoke_graph, smoke_gnn_cfg.replace(partitions=2),
+                      seed=0)
+    rep = tr.fit_supervised(5, tmp_path / "ckpt", ckpt_every=2,
+                            fail_at_step=3)
+    assert rep.failures == 1 and rep.restores == 1
+    assert rep.final_step == 5                   # resumed to completion
+
+
+# ---------------------------------------------------------------------------
+# autotune: the `partitions` knob through the restart path
+# ---------------------------------------------------------------------------
+
+def test_episode_space_gains_partitions_knob():
+    assert "partitions" not in {k.name for k in
+                                episode_space(AutotuneConfig()).knobs}
+    sp = episode_space(AutotuneConfig(max_partitions=4))
+    assert "partitions" in {k.name for k in sp.knobs}
+    rng = np.random.default_rng(0)
+    decoded = [sp.decode(u)["partitions"] for u in sp.sample(rng, 64)]
+    assert min(decoded) >= 1 and max(decoded) <= 4 and len(set(decoded)) > 1
+
+
+def test_controller_restart_path_preserves_training_state(smoke_graph,
+                                                          smoke_gnn_cfg,
+                                                          tmp_path):
+    """checkpoint → rebuild (new partition count) → restore: params carry
+    over bit-exactly and the controller ends up driving the new fleet."""
+    acfg = AutotuneConfig(episodes=2, steps_per_episode=2, warmup_steps=0,
+                          presample=16, surrogate_trees=8, ppo_updates=1,
+                          ppo_horizon=4, max_partitions=3,
+                          restart_dir=str(tmp_path / "restart"), seed=0)
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    ctrl = AutotuneController(tr, tr.make_pipeline(), acfg)
+    try:
+        before = [np.asarray(x).copy() for x in jax.tree.leaves(tr.params)]
+        ctrl._restart(2)
+        assert isinstance(ctrl.tr, MultiPartitionTrainer)
+        assert isinstance(ctrl.pipe, MultiPipeline)
+        assert ctrl.tr.cfg.partitions == 2 and ctrl.restarts == 1
+        for a, b in zip(before, jax.tree.leaves(ctrl.tr.params)):
+            np.testing.assert_allclose(a, np.asarray(b))
+        # restart back down to a single partition
+        ctrl._restart(1)
+        assert isinstance(ctrl.tr, A3GNNTrainer) and ctrl.restarts == 2
+        for a, b in zip(before, jax.tree.leaves(ctrl.tr.params)):
+            np.testing.assert_allclose(a, np.asarray(b))
+    finally:
+        ctrl.pipe.shutdown()
+
+
+@pytest.mark.slow
+def test_fit_autotuned_with_partitions_knob(smoke_graph, smoke_gnn_cfg):
+    """Full closed loop with the partitions knob enabled: every episode
+    measures successfully whatever partition count the proposal picks."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    acfg = AutotuneConfig(episodes=3, steps_per_episode=3, warmup_steps=0,
+                          presample=24, surrogate_trees=8, ppo_updates=1,
+                          ppo_horizon=4, max_workers=2, max_partitions=2,
+                          seed=0)
+    rep = tr.fit_autotuned(acfg)
+    assert len(rep.episodes) == 3
+    assert all("partitions" in ep.config for ep in rep.episodes)
+    for ep in rep.episodes:
+        assert np.isfinite(list(ep.metrics.values())).all()
+        # an episode at p partitions measured p mini-batches per global step
+        assert ep.steps == acfg.steps_per_episode * int(
+            ep.config["partitions"])

@@ -1,10 +1,9 @@
 """Locality-aware sampling: Algo. 2 oracle vs vectorized ES, bias effects,
 property-based invariants."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.sampling import (reservoir_sample_ref, es_sample, es_keys,
+from repro.core.sampling import (reservoir_sample_ref, es_sample,
                                  NeighborSampler, seed_loader)
 from repro.core.cache import FeatureCache
 from repro.core.locality import bias_weight_fn

@@ -1,5 +1,4 @@
 """Optimizers, trainer, checkpointing, fault tolerance, compression, data."""
-import os
 import time
 
 import jax
@@ -14,8 +13,8 @@ from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import (TrainSupervisor, HeartbeatMonitor,
                                          StragglerMitigator)
 from repro.train.compression import (quantize_int8, dequantize_int8,
-                                     ef_compress_int8, ef_compress_topk,
-                                     ef_init, topk_sparsify, topk_densify)
+                                     ef_compress_topk, ef_init, topk_sparsify,
+                                     topk_densify)
 from repro.train.data import SyntheticTokens, PrefetchLoader
 from repro.models.params import decl, init_params, abstract_params
 
