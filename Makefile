@@ -7,7 +7,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint ci autotune-demo bench-quick scaleout-demo
+.PHONY: test test-fast lint docs-check ci autotune-demo bench-quick \
+        scaleout-demo halo-demo
 
 test:            ## full tier-1 suite (the ROADMAP bar)
 	$(PY) -m pytest -x -q
@@ -18,7 +19,10 @@ test-fast:       ## fast lane: skips the slow pipeline/system tests
 lint:            ## ruff (or the offline fallback) over src/tests/benchmarks
 	bash scripts/ci.sh lint
 
-ci:              ## everything CI runs: lint + fast + full, with artifacts
+docs-check:      ## docs/*.md + README code anchors must resolve
+	bash scripts/ci.sh docs
+
+ci:              ## everything CI runs: lint + docs + fast + full, with artifacts
 	bash scripts/ci.sh all
 
 autotune-demo:   ## online auto-tuning on a smoke graph (paper §III-C)
@@ -28,6 +32,10 @@ autotune-demo:   ## online auto-tuning on a smoke graph (paper §III-C)
 scaleout-demo:   ## 2-partition data-parallel smoke run + restore proof
 	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
 	    --partitions 2 --steps 4
+
+halo-demo:       ## scale-out with a bounded halo exchange (kept-info report)
+	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
+	    --partitions 2 --halo-budget 32 --steps 4
 
 bench-quick:     ## reduced benchmark sweep
 	$(PY) -m benchmarks.run --quick

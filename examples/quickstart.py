@@ -1,9 +1,11 @@
-"""Quickstart: A³GNN in ~60 lines.
+"""Quickstart: the whole of A³GNN, one section per capability.
 
-Builds a synthetic products-like graph, trains GraphSAGE with
-locality-aware sampling + feature caching under each parallelism mode,
-prints the paper's three metrics for each — then lets the online
-auto-tuner pick the configuration itself.
+  §1  data        — synthetic twin of ogbn-products (smoke scale)
+  §2  parallelism — GraphSAGE under each pipeline mode (seq/mode2/mode1)
+  §3  locality    — the sampling-bias effect: γ=1 vs γ=8 cache hit rates
+  §4  autotuning  — the online controller picks (γ, Θ, mode, workers)
+  §5  scale-out   — 2 locality-aware partitions, synced gradients
+  §6  halo        — bounded boundary-feature exchange across the cut
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,7 +18,8 @@ from repro.configs.gnn import gnn_config, AutotuneConfig
 from repro.graph.synthetic import dataset_like
 from repro.core.a3gnn import A3GNNTrainer
 
-# 1. data: synthetic twin of ogbn-products (smoke scale for the demo)
+# §1 DATA: synthetic twin of ogbn-products (smoke scale for the demo),
+# with the locality knobs (γ, Θ) fixed by hand — §4 tunes them instead
 cfg = gnn_config("products", smoke=True).replace(
     bias_rate=4.0,          # γ: prefer cached neighbors 4×
     cache_volume_mb=0.15,   # Θ: device-side feature cache (~19% of features)
@@ -25,7 +28,8 @@ graph = dataset_like(cfg, seed=0)
 print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
       f"{graph.num_classes} classes")
 
-# 2. train under each parallelism mode (paper §III-B)
+# §2 PARALLELISM: one epoch under each pipeline mode (paper §III-B) —
+# seq / mode2 / mode1 trade memory for throughput
 for mode in ("seq", "mode2", "mode1"):
     trainer = A3GNNTrainer(graph, cfg.replace(parallel_mode=mode), seed=0)
     res = trainer.run_epochs(epochs=1, max_steps_per_epoch=15)
@@ -33,14 +37,15 @@ for mode in ("seq", "mode2", "mode1"):
           f"mem={res.memory_bytes/2**20:7.1f} MiB  "
           f"acc={res.test_acc:.3f}  cache-hit={res.cache_hit_rate:.2f}")
 
-# 3. the locality effect: γ=1 (uniform) vs γ=8 (strongly biased)
+# §3 LOCALITY: γ=1 (uniform sampling) vs γ=8 (strongly cache-biased) —
+# the bias raises the cache hit rate at a bounded accuracy cost
 for gamma in (1.0, 8.0):
     trainer = A3GNNTrainer(graph, cfg.replace(bias_rate=gamma), seed=0)
     res = trainer.run_epochs(epochs=1, max_steps_per_epoch=15)
     print(f"[γ={gamma:3.0f}] cache-hit={res.cache_hit_rate:.3f}  "
           f"acc={res.test_acc:.3f}")
 
-# 4. AUTOTUNING (paper §III-C): instead of fixing (γ, Θ, mode, workers) by
+# §4 AUTOTUNING (paper §III-C): instead of fixing (γ, Θ, mode, workers) by
 # hand as above, `fit_autotuned` runs tuning episodes on the live trainer —
 # each episode the RL explorer proposes a configuration from the surrogate,
 # the pipeline drains and reconfigures (cache resize, γ swap, mode switch),
@@ -62,7 +67,7 @@ print(f"autotuned: episode {best.index} chosen — "
       f"{report.baseline_metrics['throughput']:.1f} steps/s; "
       f"{len(report.pareto_points())} Pareto-optimal measured points")
 
-# 5. SCALE-OUT (the paper's headline): partition the graph with the
+# §5 SCALE-OUT (the paper's headline): partition the graph with the
 # locality-aware assigner, give every partition its own cache + pipeline,
 # and synchronize gradients across the partition mesh (host-simulated on
 # one CPU; real devices drop in transparently).  Same smoke run as
@@ -78,3 +83,24 @@ res = trainer.run_epochs(epochs=1, max_steps_per_epoch=8)
 print(f"[2-part] agg-thr={res.modeled_steps_s:6.1f} steps/s  "
       f"mem={res.memory_bytes/2**20:7.1f} MiB  acc={res.test_acc:.3f}  "
       f"cache-hit={res.cache_hit_rate:.2f}")
+
+# §6 HALO EXCHANGE: §5 dropped every cut edge (the paper's
+# no-remote-access setting).  A halo budget keeps each partition's top-k
+# boundary nodes by affinity: their feature rows move ONCE through the
+# partition mesh (collectives.halo_all_to_all) and sampled batches reach
+# one hop across the cut — kept information rises for a measured,
+# bounded exchange volume.  Same smoke run as
+#     PYTHONPATH=src python -m repro.launch.train \
+#         --arch graphsage-products --smoke --partitions 2 \
+#         --halo-budget 32 --steps 4
+trainer = make_trainer(graph, cfg.replace(partitions=2, halo_budget=32),
+                       seed=0)
+plan = trainer.plan
+print(f"halo: budget=32/partition  "
+      f"kept-info={plan.kept_information(graph):.3f} "
+      f"(vs {plan.edge_locality(graph):.3f} with cut edges dropped)  "
+      f"exchange={trainer.halo_exchange_bytes/2**10:.0f} KiB")
+res = trainer.run_epochs(epochs=1, max_steps_per_epoch=8)
+print(f"[halo]   acc={res.test_acc:.3f}  "
+      f"halo-hit={trainer.halo_hit_rate:.3f} "
+      f"(share of batch inputs served across the cut)")

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs anchor checker — offline-safe, stdlib-only (like lint_fallback.py).
+
+Every backticked ``path/to/module.py:symbol`` anchor in docs/*.md (and
+README.md) must resolve: the path exists relative to the repo root and
+the symbol occurs in that file as a word. Bare backticked ``*.py`` /
+``*.md`` / ``*.sh`` paths are checked for existence. This keeps the
+docs' module map from silently drifting as code moves.
+
+    python scripts/check_docs.py [docs_dir ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# `path/to/file.py:symbol` — the path must contain a slash, so prose
+# placeholders like a backticked "file.py:symbol" never match
+ANCHOR_RE = re.compile(r"`((?:[\w.-]+/)+[\w.-]+\.py):([A-Za-z_]\w*)`")
+# bare backticked paths: slashed ones must exist; slash-less ones (e.g.
+# `ROADMAP.md`, but also generic placeholders) are checked only if they
+# resolve from the repo root, otherwise treated as prose
+PATH_RE = re.compile(r"`([\w./-]+\.(?:py|md|sh|yml|toml))`")
+
+
+def check_doc(doc: Path):
+    """Returns (problems, anchor_count) for one markdown file."""
+    text = doc.read_text()
+    problems = []
+    anchors = 0
+    for m in ANCHOR_RE.finditer(text):
+        anchors += 1
+        rel, symbol = m.group(1), m.group(2)
+        target = ROOT / rel
+        if not target.is_file():
+            problems.append(f"{doc.name}: `{rel}:{symbol}` — no such file")
+            continue
+        if not re.search(rf"\b{re.escape(symbol)}\b", target.read_text()):
+            problems.append(f"{doc.name}: `{rel}:{symbol}` — symbol not "
+                            f"found in {rel}")
+    for m in PATH_RE.finditer(text):
+        rel = m.group(1)
+        if "/" not in rel and not (ROOT / rel).is_file():
+            continue                   # slash-less prose placeholder
+        if not (ROOT / rel).is_file():
+            problems.append(f"{doc.name}: `{rel}` — no such file")
+    return problems, anchors
+
+
+def main(argv):
+    dirs = [Path(a) for a in argv] or [ROOT / "docs"]
+    docs = [p for d in dirs for p in sorted(d.glob("*.md"))]
+    readme = ROOT / "README.md"
+    if readme.is_file() and readme not in docs:
+        docs.append(readme)
+    if not docs:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 2
+    problems = []
+    anchors = 0
+    for doc in docs:
+        doc_problems, doc_anchors = check_doc(doc)
+        problems.extend(doc_problems)
+        anchors += doc_anchors
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    print(f"check_docs: {len(docs)} docs, {anchors} code anchors, "
+          f"{len(problems)} broken")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

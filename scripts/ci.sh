@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # CI entry point — used by .github/workflows/ci.yml and runnable locally.
 #
-#     scripts/ci.sh [lint|fast|full|all]     (default: all)
+#     scripts/ci.sh [lint|docs|fast|full|all]     (default: all)
 #
 # Lanes:
 #   lint:  `ruff check src tests benchmarks` (config in pyproject.toml);
 #          falls back to scripts/lint_fallback.py (same rule subset) on
 #          hosts without ruff, so the lane is meaningful offline.
+#   docs:  scripts/check_docs.py — every `path.py:symbol` code anchor in
+#          docs/*.md and README.md must resolve (offline-safe, stdlib).
+#          Runs in lane 1 (the fast job) alongside the fast tests.
 #   fast:  everything except tests marked `slow` — the sub-minute signal
 #          for every push.  The CI fast job does NOT install `hypothesis`,
 #          keeping the tests/_hypothesis_compat.py shim path covered.
@@ -50,6 +53,8 @@ lint_cmd() {
 case "$LANE" in
     lint)
         run_lane lint lint_cmd ;;
+    docs)
+        run_lane docs python scripts/check_docs.py ;;
     fast)
         run_lane fast python -m pytest -x -q -m "not slow" \
             --junitxml "$ART/junit_fast.xml" ;;
@@ -58,12 +63,13 @@ case "$LANE" in
             --junitxml "$ART/junit_full.xml" ;;
     all)
         run_lane lint lint_cmd
+        run_lane docs python scripts/check_docs.py
         run_lane fast python -m pytest -x -q -m "not slow" \
             --junitxml "$ART/junit_fast.xml"
         run_lane full python -m pytest -x -q \
             --junitxml "$ART/junit_full.xml" ;;
     *)
-        echo "usage: scripts/ci.sh [lint|fast|full|all]" >&2
+        echo "usage: scripts/ci.sh [lint|docs|fast|full|all]" >&2
         exit 2 ;;
 esac
 echo "--- $ART/timing.csv ---"

@@ -44,6 +44,10 @@ class AutotuneConfig:
     # > 1 adds the `partitions` knob: applied through the restart-capable
     # path (checkpoint → rebuild trainer → restore), not a live swap
     max_partitions: int = 1
+    # > 0 adds the `halo_budget` knob (bounded halo-feature exchange);
+    # swaps LIVE — the plan is re-budgeted and slots rebuilt in place,
+    # params/optimizer state never leave memory
+    max_halo_budget: int = 0
     restart_dir: str = ""            # "" → a fresh temp dir per controller
     seed: int = 0
 
@@ -74,6 +78,9 @@ class GNNConfig:
     workers: int = 2
     parallel_mode: str = "seq"          # seq | mode1 | mode2
     partitions: int = 1
+    # bounded halo exchange: top-k boundary features each partition keeps
+    # (0 → drop cut edges entirely, the paper's no-remote-access setting)
+    halo_budget: int = 0
     # training
     lr: float = 3e-3
     dropout: float = 0.0

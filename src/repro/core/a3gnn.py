@@ -230,10 +230,14 @@ class A3GNNTrainer(TrainerCheckpointMixin):
         workers, batch_size) to the live trainer: the cache is resized with
         its hit/miss accounting intact, the sampler bias weight function is
         rebuilt for the new γ, and — when ``pipe`` is given — the executor
-        drains and swaps mode/workers without dropping a batch."""
+        drains and swaps mode/workers without dropping a batch.
+        ``halo_budget`` is recorded but inert at one partition (no cut
+        edges to recover; core/multipart.py implements the real swap)."""
         updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
                                          "parallel_mode", "workers",
                                          "batch_size") if k in knobs}
+        if "halo_budget" in knobs:
+            self.cfg = self.cfg.replace(halo_budget=int(knobs["halo_budget"]))
         if "workers" in updates:
             updates["workers"] = int(updates["workers"])
         if "batch_size" in updates:

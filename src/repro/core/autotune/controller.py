@@ -63,10 +63,11 @@ HIT_SPEEDUP = 0.6
 
 
 def episode_space(acfg: AutotuneConfig) -> Space:
-    """The tunable subset of Table I.  γ, Θ, mode and workers swap live at
-    an episode boundary; with ``max_partitions > 1`` the partition count
-    joins the space and is applied through the restart-capable path
-    (checkpoint → rebuild trainer → restore)."""
+    """The tunable subset of Table I.  γ, Θ, mode, workers — and, with
+    ``max_halo_budget > 0``, the halo budget — swap live at an episode
+    boundary; with ``max_partitions > 1`` the partition count joins the
+    space and is applied through the restart-capable path (checkpoint →
+    rebuild trainer → restore)."""
     knobs = [
         Knob("bias_rate", "log", 1.0, acfg.max_bias_rate),
         Knob("cache_volume_mb", "log", 0.05, acfg.max_cache_mb),
@@ -75,6 +76,8 @@ def episode_space(acfg: AutotuneConfig) -> Space:
     ]
     if acfg.max_partitions > 1:
         knobs.append(Knob("partitions", "int", 1, acfg.max_partitions))
+    if acfg.max_halo_budget > 0:
+        knobs.append(Knob("halo_budget", "int", 0, acfg.max_halo_budget))
     return Space(knobs)
 
 
@@ -197,6 +200,8 @@ class AutotuneController:
                "workers": self.pipe.workers_n}
         if "partitions" in self._knob_names:
             cfg["partitions"] = int(c.partitions)
+        if "halo_budget" in self._knob_names:
+            cfg["halo_budget"] = int(getattr(c, "halo_budget", 0))
         return cfg
 
     def _encode(self, cfg: Dict) -> np.ndarray:
@@ -232,6 +237,8 @@ class AutotuneController:
         # while partition overlap η (Eq. 1) shrinks accuracy
         cur_p = max(int(getattr(self.tr.cfg, "partitions", 1)), 1)
         p = max(int(cfg.get("partitions", cur_p)), 1)
+        budget = max(int(cfg.get("halo_budget",
+                                 getattr(self.tr.cfg, "halo_budget", 0))), 0)
         mt = MemoryTerms(
             cache_bytes=cfg["cache_volume_mb"] * 2**20,
             batch_bytes=max(base_stats.peak_batch_bytes, 1),
@@ -241,11 +248,17 @@ class AutotuneController:
                "mode1": lambda t: memory_mode1(t, int(cfg["workers"])),
                "mode2": lambda t: memory_mode2(t, int(cfg["workers"])),
                }[cfg["parallel_mode"]](mt)
-        eta = min(1.0, self.tr.eta * cur_p / p)
+        # the halo budget widens each partition's effective overlap η (one
+        # extra hop of boundary features) at the cost of replicated rows
+        n_nodes = max(self.tr.full_graph.num_nodes, 1)
+        eta = min(1.0, self.tr.eta * cur_p / p
+                  + (budget / n_nodes if p > 1 else 0.0))
+        halo_bytes = budget * self.tr.graph.feat_dim * 4 * (p if p > 1 else 0)
         drop = accuracy_drop_model(eta, cfg["bias_rate"],
                                    self.tr.graph.density(),
                                    self._cache_frac(cfg["cache_volume_mb"]))
-        return {"throughput": p / max(step_t, 1e-9), "memory": float(mem) * p,
+        return {"throughput": p / max(step_t, 1e-9),
+                "memory": float(mem) * p + halo_bytes,
                 "accuracy": max(base_acc - drop, 0.0)}
 
     # -- surrogate bookkeeping ----------------------------------------------
@@ -323,12 +336,15 @@ class AutotuneController:
         return max(int(cfg.get("partitions",
                                getattr(self.tr.cfg, "partitions", 1))), 1)
 
-    def _restart(self, new_partitions: int):
+    def _restart(self, new_partitions: int,
+                 halo_budget: Optional[int] = None):
         """checkpoint → rebuild trainer at the new partition count → restore.
 
         Params and optimizer state round-trip through train/checkpoint.py
         (the same machinery a real elastic restart uses), so training
-        resumes exactly where it left off on the new topology."""
+        resumes exactly where it left off on the new topology.  A proposed
+        ``halo_budget`` rides along into the rebuild so the subsequent
+        live-swap pass finds it already applied (one slot build, not two)."""
         import tempfile
         from repro.core.a3gnn import make_trainer
         from repro.train.checkpoint import CheckpointManager
@@ -343,9 +359,14 @@ class AutotuneController:
         # survive the migration
         self.tr.save(self._restart_mgr, step=self.restarts)
         self.pipe.shutdown()
-        new_tr = make_trainer(self.tr.full_graph,
-                              self.tr.cfg.replace(partitions=new_partitions),
-                              seed=self.tr.seed)
+        new_cfg = self.tr.cfg.replace(partitions=new_partitions)
+        if halo_budget is not None:
+            new_cfg = new_cfg.replace(halo_budget=max(int(halo_budget), 0))
+        # keep the assigner the caller chose (a bfs/hash trainer must not
+        # silently migrate to the locality default mid-autotune)
+        method = getattr(getattr(self.tr, "plan", None), "method", "locality")
+        new_tr = make_trainer(self.tr.full_graph, new_cfg, seed=self.tr.seed,
+                              partition_method=method)
         new_tr.restore(self._restart_mgr, step=self.restarts,
                        expect_partitions=old_p)
         self.tr, self.pipe = new_tr, new_tr.make_pipeline()
@@ -355,7 +376,8 @@ class AutotuneController:
         apply the live-swappable knobs to the (possibly new) trainer."""
         if self._proposed_partitions(cfg) != max(
                 int(getattr(self.tr.cfg, "partitions", 1)), 1):
-            self._restart(self._proposed_partitions(cfg))
+            self._restart(self._proposed_partitions(cfg),
+                          halo_budget=cfg.get("halo_budget"))
         self.tr.apply_live_config(cfg, self.pipe)
 
     # -- main loop -----------------------------------------------------------

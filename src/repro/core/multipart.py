@@ -15,6 +15,12 @@ the existing substrate:
     under a mesh from ``launch/mesh.make_partition_mesh`` — a real device
     mesh when the host has one device per partition, a ``HostSimMesh``
     (identical arithmetic, no topology) on the 1-CPU CI container;
+  * with ``cfg.halo_budget > 0`` each partition's subgraph is augmented
+    with its top-k boundary nodes (``PartitionPlan.halo_sets``) and their
+    feature rows arrive through ``distributed/collectives.halo_all_to_all``
+    — sampled batches reach one hop across the cut, and per-partition
+    ``HaloStats`` count how many batch input nodes the halo served
+    (checkpointed next to the cache hit accounting);
   * checkpoint/restore rides ``train/checkpoint.py`` (partition topology +
     per-partition cache hit accounting in the manifest) and restart/straggler
     handling rides ``train/fault_tolerance.py`` (``fit_supervised``).
@@ -26,7 +32,7 @@ checkpoint → rebuild → restore restart path.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -39,7 +45,7 @@ from repro.core.perf_model import (MemoryTerms, bottleneck_step_time,
                                    memory_mode1, memory_mode2, memory_seq)
 from repro.core.pipeline import Pipeline, PipelineStats
 from repro.core.sampling import NeighborSampler, seed_loader
-from repro.distributed.collectives import grad_allreduce
+from repro.distributed.collectives import grad_allreduce, halo_all_to_all
 from repro.graph.batch import generate_batch, batch_device_arrays
 from repro.graph.partition import PartitionPlan, plan_partitions
 from repro.graph.storage import Graph
@@ -55,15 +61,34 @@ RUNTIME_BYTES = 16 * 2**20        # fixed per-worker runtime context (Eq. 3)
 
 
 @dataclass
+class HaloStats:
+    """Per-partition halo accounting: how many batch input nodes fell in
+    the halo region (local id ≥ owned count) — the information the bounded
+    exchange recovered vs. PR 2's drop-cut-edges setting."""
+    halo_hits: int = 0          # input nodes served from the halo region
+    inputs: int = 0             # total batch input nodes seen
+    batches: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.halo_hits / self.inputs if self.inputs else 0.0
+
+    def reset(self):
+        self.halo_hits = self.inputs = self.batches = 0
+
+
+@dataclass
 class PartitionSlot:
     """One partition's private training state (the per-device view)."""
     index: int
     graph: Graph
     eta: float
+    n_owned: int = 0            # local ids ≥ n_owned are halo rows
     cache: Optional[FeatureCache] = None
     weight_fn: Optional[Callable] = None
     pipe: Optional[Pipeline] = None
     pending_grads: Optional[Dict] = None
+    halo_stats: HaloStats = field(default_factory=HaloStats)
     _seed_iter: Optional[object] = None
     _epoch: int = 0
 
@@ -180,9 +205,12 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.cfg = cfg
         self.seed = seed
         self.plan: PartitionPlan = plan_partitions(graph, cfg.partitions,
-                                                   method, seed)
+                                                   method, seed,
+                                                   halo_budget=cfg.halo_budget)
         self.mesh = make_partition_mesh(self.plan.parts)
         self._allreduce = grad_allreduce(self.mesh)
+        self._halo_exchange = halo_all_to_all(self.mesh)
+        self.halo_exchange_bytes = self._fill_halo_features()
         rng = jax.random.PRNGKey(seed)
         self.decls = decls_gnn(cfg)
         self.params = init_params(self.decls, rng)
@@ -197,6 +225,21 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.global_steps = 0
 
     # ------------------------------------------------------------------
+    def _fill_halo_features(self) -> int:
+        """Move the budgeted boundary feature rows through the partition
+        mesh (``halo_all_to_all``): each subgraph's halo rows — zeroed by
+        the plan, owned by another partition — are filled from the owner's
+        feature store.  Returns the exchange volume in bytes."""
+        if self.plan.halo_rows == 0:
+            return 0
+        owned = [sub.features[:len(ns)] for sub, ns in
+                 zip(self.plan.subgraphs, self.plan.node_sets)]
+        halo_feats, volume = self._halo_exchange(self.plan, owned)
+        for sub, ns, rows in zip(self.plan.subgraphs, self.plan.node_sets,
+                                 halo_feats):
+            sub.features[len(ns):] = rows
+        return int(volume)
+
     def _make_slot(self, p: int, sub: Graph) -> PartitionSlot:
         cfg = self.cfg
         cache = (FeatureCache(sub, cfg.cache_volume_mb, cfg.cache_policy,
@@ -204,9 +247,12 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
                  if cfg.cache_volume_mb > 0 else None)
         weight_fn = (bias_weight_fn(cache, cfg.bias_rate)
                      if (cache is not None and cfg.bias_rate > 1.0) else None)
+        n_owned = len(self.plan.node_sets[p])
+        # Eq. 1 overlap counts OWNED nodes only — halo leaves are borrowed
+        # features, not partition membership
         slot = PartitionSlot(index=p, graph=sub,
-                             eta=sub.num_nodes / max(self.full_graph.num_nodes,
-                                                     1),
+                             eta=n_owned / max(self.full_graph.num_nodes, 1),
+                             n_owned=n_owned,
                              cache=cache, weight_fn=weight_fn)
         slot.pipe = Pipeline(sub, cfg, self._slot_train_fn(slot), cache=cache,
                              weight_fn=weight_fn, seed=self.seed + p)
@@ -216,6 +262,10 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         """Per-partition "train" = local gradient computation; the shared
         update is applied after the cross-partition all-reduce."""
         def fn(mb):
+            hs = slot.halo_stats
+            hs.halo_hits += int((mb.input_ids >= slot.n_owned).sum())
+            hs.inputs += len(mb.input_ids)
+            hs.batches += 1
             arrays = batch_device_arrays(mb)
             grads, loss, acc = self._grad(self.params, arrays["features"],
                                           arrays["neigh_idxs"],
@@ -304,7 +354,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         ``simulate`` is accepted for signature parity (execution is already
         sequential-per-host on the CI container)."""
         del simulate
-        from repro.core.a3gnn import RunResult
+        from repro.core.a3gnn import A3GNNTrainer, RunResult
         pipe = self.make_pipeline()
         target_mode = mode or self.cfg.parallel_mode
         if warmup_steps:
@@ -313,23 +363,11 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
             for c in self.caches:
                 if c is not None:
                     c.stats.reset()
-        agg: Optional[PipelineStats] = None
         try:
-            for ep in range(epochs):
-                stats = pipe.run(mode=target_mode,
-                                 max_steps=max_steps_per_epoch,
-                                 fail_worker=fail_worker if ep == 0 else None)
-                if agg is None:
-                    agg = stats
-                else:
-                    for k in ("steps", "t_sample", "t_batch", "t_train",
-                              "t_wall"):
-                        setattr(agg, k, getattr(agg, k) + getattr(stats, k))
-                    agg.losses += stats.losses
-                    agg.accs += stats.accs
-                    agg.reissued += stats.reissued
-                    agg.peak_batch_bytes = max(agg.peak_batch_bytes,
-                                               stats.peak_batch_bytes)
+            # same per-epoch stats merge as the single-partition trainer
+            agg = A3GNNTrainer._run_pipe_epochs(pipe, target_mode, epochs,
+                                                max_steps_per_epoch,
+                                                fail_worker)
         finally:
             pipe.shutdown()
         steps_per_epoch = (max_steps_per_epoch
@@ -372,6 +410,17 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
                            if c is not None)
         return hits / total if total else 0.0
 
+    @property
+    def halo_stats(self) -> List[HaloStats]:
+        return [s.halo_stats for s in self.slots]
+
+    @property
+    def halo_hit_rate(self) -> float:
+        """Fleet-wide fraction of batch input nodes served from the halo."""
+        hits = sum(h.halo_hits for h in self.halo_stats)
+        total = sum(h.inputs for h in self.halo_stats)
+        return hits / total if total else 0.0
+
     def model_bytes(self, stats: PipelineStats) -> float:
         act_factor = max(3.0 * self.cfg.hidden * self.cfg.num_layers
                          / max(self.cfg.feat_dim, 1), 1.0)
@@ -397,7 +446,9 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         per_part = {"mode1": lambda t: memory_mode1(t, workers),
                     "mode2": lambda t: memory_mode2(t, workers),
                     "seq": memory_seq}[mode](mt)
-        return per_part * self.plan.parts
+        # budgeted halo feature rows are replicated device-side state
+        halo_bytes = self.plan.halo_rows * self.full_graph.feat_dim * 4
+        return per_part * self.plan.parts + halo_bytes
 
     def predicted_accuracy_drop(self) -> float:
         cache_frac = ((self.cache.capacity / self.graph.num_nodes)
@@ -406,11 +457,43 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
                                    self.full_graph.density(), cache_frac)
 
     # ------------------------------------------------------------------
+    def set_halo_budget(self, budget: int,
+                        pipe: Optional[MultiPipeline] = None):
+        """LIVE halo-budget swap: re-budget the existing assignment
+        (``PartitionPlan.with_halo_budget`` — owner/node_sets untouched, so
+        no re-partition and no restart path), refill halo rows through the
+        mesh, and rebuild the per-partition slots in place.  Params,
+        optimizer state and cache hit accounting carry over; in-flight
+        batches are drained first (nothing dropped).  Halo accounting
+        starts FRESH — it describes the current halo topology, and a
+        budget change swaps that topology (the same invariant
+        ``_after_restore`` enforces on the checkpoint path)."""
+        budget = max(int(budget), 0)
+        if budget == self.plan.halo_budget:
+            self.cfg = self.cfg.replace(halo_budget=budget)
+            return
+        if pipe is not None:
+            pipe.drain()
+        old = self.slots
+        for slot in old:
+            slot.pipe.shutdown()
+        self.plan = self.plan.with_halo_budget(self.full_graph, budget)
+        self.cfg = self.cfg.replace(halo_budget=budget)
+        self.halo_exchange_bytes = self._fill_halo_features()
+        self.slots = [self._make_slot(p, sub) for p, sub in
+                      enumerate(self.plan.subgraphs)]
+        for new, prev in zip(self.slots, old):
+            if new.cache is not None and prev.cache is not None:
+                new.cache.stats = prev.cache.stats   # accounting survives
+
     def apply_live_config(self, knobs: Dict,
                           pipe: Optional[MultiPipeline] = None):
         """Episode-boundary reconfiguration, fanned out to every partition
         (same contract as ``A3GNNTrainer.apply_live_config``; the
-        ``partitions`` knob itself needs the restart path instead)."""
+        ``partitions`` knob itself needs the restart path instead, while
+        ``halo_budget`` swaps live through ``set_halo_budget``)."""
+        if "halo_budget" in knobs:
+            self.set_halo_budget(int(knobs["halo_budget"]), pipe)
         updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
                                          "parallel_mode", "workers",
                                          "batch_size") if k in knobs}
@@ -488,24 +571,37 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
     # load_state_dict / save / restore (+ the partition-count guard)
     # ------------------------------------------------------------------
     def checkpoint_extra(self) -> Dict:
-        """Manifest payload: topology + per-partition cache accounting, so a
-        restore resumes with hit/miss history (and the restart path can
-        verify what it is migrating)."""
+        """Manifest payload: topology + per-partition cache AND halo
+        accounting, so a restore resumes with hit/miss history (and the
+        restart path can verify what it is migrating)."""
         return {**super().checkpoint_extra(),
                 "partition_method": self.plan.method,
+                "halo_budget": int(self.plan.halo_budget),
                 "cache_stats": [dataclasses.asdict(s.cache.stats)
                                 if s.cache is not None else None
-                                for s in self.slots]}
+                                for s in self.slots],
+                "halo_stats": [dataclasses.asdict(s.halo_stats)
+                               for s in self.slots]}
 
     def _after_restore(self, extra: Dict, step: int):
         self.global_steps = int(extra.get("global_steps", step))
-        # cache hit-accounting carries over only on a same-topology restore
-        # (after a migration the per-partition caches are new objects)
+        # cache/halo hit-accounting carries over only on a same-topology
+        # restore (after a migration the per-partition objects are new)
         if int(extra.get("partitions", self.plan.parts)) == self.plan.parts:
             for slot, st in zip(self.slots, extra.get("cache_stats") or []):
                 if slot.cache is not None and st:
                     for k, v in st.items():
                         setattr(slot.cache.stats, k, int(v))
+            # ...and halo accounting additionally requires the same budget
+            # (restoring budget>0 hits into a budget=0 topology would
+            # report a halo hit rate on a fleet that has no halo)
+            if int(extra.get("halo_budget",
+                             self.plan.halo_budget)) == self.plan.halo_budget:
+                for slot, st in zip(self.slots,
+                                    extra.get("halo_stats") or []):
+                    if st:
+                        for k, v in st.items():
+                            setattr(slot.halo_stats, k, int(v))
 
     def fit_supervised(self, steps: int, ckpt_dir, ckpt_every: int = 0,
                        max_restarts: int = 3,

@@ -103,6 +103,102 @@ def grad_allreduce(mesh, axis: str = "part"):
     return mesh_mean
 
 
+def halo_all_to_all(mesh, axis: str = "part"):
+    """Bounded halo-feature exchange over the partition mesh.
+
+    Returns ``fn(plan, part_feats) -> (halo_feats, volume_bytes)`` where
+    ``part_feats[p]`` are partition p's OWNED feature rows in local order
+    and ``halo_feats[p]`` are the rows for ``plan.halo_sets[p]`` in halo
+    order — every row is owned by another partition, so all of them cross
+    a boundary (``volume_bytes`` counts exactly that traffic, the HitGNN
+    inter-device term the ``halo_budget`` knob caps).
+
+    On a real ``Mesh`` (one device per partition) the rows move through a
+    shard_map ``jax.lax.all_to_all`` over per-pair send buffers padded to
+    the largest pair; on a ``HostSimMesh`` (CI: fewer devices than
+    partitions) the same routing runs as host-side gathers — bitwise the
+    same rows, no device topology required.
+    """
+    import numpy as np
+
+    from repro.launch.mesh import HostSimMesh
+
+    def _routing(plan):
+        """Global→local index map plus, per (src q → dst p) pair, the rows
+        q sends (q-local ids) and where p scatters them (halo positions)."""
+        parts = plan.parts
+        loc = np.zeros(len(plan.owner), np.int64)
+        for ns in plan.node_sets:
+            loc[ns] = np.arange(len(ns))
+        send = [[None] * parts for _ in range(parts)]   # send[q][p]
+        put = [[None] * parts for _ in range(parts)]    # put[p][q]
+        for p, hs in enumerate(plan.halo_sets):
+            owners = plan.owner[hs] if len(hs) else np.zeros(0, np.int32)
+            for q in range(parts):
+                pos = np.where(owners == q)[0]
+                send[q][p] = loc[hs[pos]]
+                put[p][q] = pos
+        return send, put
+
+    def _volume(plan, feat_dim: int) -> int:
+        return plan.halo_rows * feat_dim * 4
+
+    if isinstance(mesh, HostSimMesh) or mesh is None:
+        def host_exchange(plan, part_feats):
+            send, put = _routing(plan)
+            halo_feats = []
+            for p, hs in enumerate(plan.halo_sets):
+                rows = np.zeros((len(hs), part_feats[p].shape[1]), np.float32)
+                for q in range(plan.parts):
+                    if len(put[p][q]):
+                        rows[put[p][q]] = part_feats[q][send[q][p]]
+                halo_feats.append(rows)
+            return halo_feats, _volume(plan, part_feats[0].shape[1])
+        return host_exchange
+
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def mesh_exchange(plan, part_feats):
+        if plan.parts != axis_size:
+            raise ValueError(f"plan has {plan.parts} partitions for a "
+                             f"{axis_size}-way '{axis}' mesh axis")
+        send, put = _routing(plan)
+        feat_dim = part_feats[0].shape[1]
+        pad = max((len(send[q][p]) for q in range(plan.parts)
+                   for p in range(plan.parts)), default=0)
+        if pad == 0:
+            return ([np.zeros((0, feat_dim), np.float32)
+                     for _ in range(plan.parts)], 0)
+        # send_buf[q] : (parts, pad, F) — block p = rows q ships to p
+        bufs = []
+        for q in range(plan.parts):
+            buf = np.zeros((plan.parts, pad, feat_dim), np.float32)
+            for p in range(plan.parts):
+                rows = send[q][p]
+                buf[p, :len(rows)] = part_feats[q][rows]
+            bufs.append(buf)
+        stacked = jnp.stack(bufs)                     # (parts, parts, pad, F)
+
+        def local(x):                                 # x: (1, parts, pad, F)
+            return jax.lax.all_to_all(x, axis, split_axis=1, concat_axis=0)
+
+        recv = shard_map(local, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis), check_rep=False)(stacked)
+        # shard p's local (parts, 1, pad, F) blocks concatenate on axis 0
+        recv = np.asarray(recv).reshape(plan.parts, plan.parts, pad,
+                                        feat_dim)   # recv[p][q] = send[q][p]
+        halo_feats = []
+        for p, hs in enumerate(plan.halo_sets):
+            rows = np.zeros((len(hs), feat_dim), np.float32)
+            for q in range(plan.parts):
+                if len(put[p][q]):
+                    rows[put[p][q]] = recv[p, q, :len(put[p][q])]
+            halo_feats.append(rows)
+        return halo_feats, _volume(plan, feat_dim)
+
+    return mesh_exchange
+
+
 def quantized_allreduce_bytes(shape, n_devices: int, bits: int = 8) -> float:
     """Analytic DCN volume of a compressed ring all-reduce (roofline helper)."""
     import numpy as np

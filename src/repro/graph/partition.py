@@ -6,7 +6,20 @@ setting: no remote feature access, accepted accuracy cost modeled by the
 ``PartitionPlan`` — the assignment plus the cut/halo statistics that the
 locality objective minimizes: a *halo node* of partition p is a node
 owned elsewhere but adjacent to p, i.e. exactly the features p would
-have to fetch remotely (HitGNN's inter-device traffic term)."""
+have to fetch remotely (HitGNN's inter-device traffic term).
+
+BOUNDED HALO EXCHANGE: with ``halo_budget > 0`` each partition keeps the
+top-k halo candidates by *affinity* — the number of owned→candidate cut
+edges, i.e. exactly the edges the out-edge-following sampler can
+traverse (remote→owned edges are invisible to it on these directed
+graphs, so they earn no rank), ties broken by node id so larger budgets
+are strict prefix-supersets of smaller ones.  The budgeted halo nodes
+are appended to the partition's subgraph as feature-only leaves — owned
+nodes keep their out-edges into them, so a sampled batch reaches ONE
+hop across the cut — and their feature rows are moved through
+``distributed/collectives.halo_all_to_all`` (never read locally).  With
+``halo_budget=0`` the plan is bit-identical to the drop-cut-edges
+setting (the regression anchor)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -126,17 +139,37 @@ _METHODS = {"hash": hash_partition, "bfs": bfs_partition,
 @dataclass
 class PartitionPlan:
     """A partition assignment plus the statistics the scale-out path and
-    the Eq. (1) accuracy model consume."""
+    the Eq. (1) accuracy model consume.
+
+    ``halo_sets[p]`` holds the budgeted halo nodes of partition p as
+    GLOBAL ids in affinity-rank order; the subgraph of partition p appends
+    them after the owned nodes, so local ids ``>= len(node_sets[p])`` are
+    halo rows (feature-only leaves whose rows arrive through
+    ``halo_all_to_all``)."""
     node_sets: List[np.ndarray]
     owner: np.ndarray               # (N,) int32 node → partition
     method: str
     subgraphs: List[Graph] = field(default_factory=list)
     cut_edges: int = 0              # edges crossing a partition boundary
-    halo_counts: List[int] = field(default_factory=list)
+    halo_counts: List[int] = field(default_factory=list)   # candidate pool
+    halo_budget: int = 0            # per-partition cap on kept halo nodes
+    halo_sets: List[np.ndarray] = field(default_factory=list)
+    recovered_edges: int = 0        # cut edges reachable again via the halo
+    # full affinity ranking (ids + per-id recovered-edge counts), kept so
+    # a live re-budget slices prefixes instead of rescanning the edges
+    halo_ranked: List[np.ndarray] = field(default_factory=list, repr=False)
+    halo_ranked_aff: List[np.ndarray] = field(default_factory=list,
+                                              repr=False)
 
     @property
     def parts(self) -> int:
         return len(self.node_sets)
+
+    @property
+    def halo_rows(self) -> int:
+        """Total budgeted halo feature rows across the fleet — the row
+        count ``halo_all_to_all`` moves (all of them cross a boundary)."""
+        return int(sum(len(hs) for hs in self.halo_sets))
 
     def etas(self, full: Graph) -> List[float]:
         """Per-partition η = |Vs_i| / |V| of Eq. (1)."""
@@ -146,10 +179,78 @@ class PartitionPlan:
         """Fraction of edges kept inside a partition (1 − cut ratio)."""
         return 1.0 - self.cut_edges / max(full.num_edges, 1)
 
+    def kept_information(self, full: Graph) -> float:
+        """Fraction of full-graph edges some partition's sampler can still
+        follow: internal edges plus the cut edges recovered through the
+        budgeted halo.  Equals ``edge_locality`` at ``halo_budget=0`` and
+        strictly exceeds it whenever the budget recovers a cut edge."""
+        kept = full.num_edges - self.cut_edges + self.recovered_edges
+        return kept / max(full.num_edges, 1)
+
+    def exchange_volume_bytes(self, full: Graph) -> int:
+        """Analytic boundary-feature traffic of one full halo refresh."""
+        return self.halo_rows * full.feat_dim * 4
+
+    def with_halo_budget(self, full: Graph, budget: int) -> "PartitionPlan":
+        """Re-budget the SAME assignment (owner/node_sets untouched) —
+        the live ``halo_budget`` swap path: the stored affinity ranking is
+        sliced to the new prefix (no edge rescan, no re-partition); only
+        the subgraphs are rebuilt for the new halo tails."""
+        return _finalize_plan(full, self.node_sets, self.owner, self.method,
+                              budget, ranking=(self.halo_ranked,
+                                               self.halo_ranked_aff,
+                                               self.halo_counts,
+                                               self.cut_edges))
+
+
+def _halo_candidates(g: Graph, owner: np.ndarray, parts: int):
+    """Per-partition halo candidates ranked by affinity = the number of
+    owned→candidate cut edges (the only direction the out-edge-following
+    sampler can traverse — a remote→owned edge recovers nothing, so it
+    earns no rank); ties broken by ascending node id so a larger budget
+    keeps a strict prefix-superset of a smaller one.  ``halo_counts``
+    stays the full either-direction candidate pool (the remote-fetch
+    statistic the PR 2 plan reported)."""
+    src = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    cross = owner[src] != owner[g.indices]
+    ranked, affs, counts = [], [], []
+    for p in range(parts):
+        out_nb = g.indices[cross & (owner[src] == p)]     # owned → remote
+        in_src = src[cross & (owner[g.indices] == p)]     # remote → owned
+        ids, aff = np.unique(out_nb, return_counts=True)
+        order = np.lexsort((ids, -aff))
+        ranked.append(ids[order].astype(np.int64))
+        affs.append(aff[order].astype(np.int64))
+        counts.append(int(len(np.unique(np.concatenate([out_nb, in_src])))))
+    return ranked, affs, counts, int(cross.sum())
+
+
+def _finalize_plan(g: Graph, node_sets: List[np.ndarray], owner: np.ndarray,
+                   method: str, halo_budget: int,
+                   ranking=None) -> PartitionPlan:
+    parts = len(node_sets)
+    budget = max(int(halo_budget), 0)
+    if ranking is None:
+        ranked, affs, counts, cut = _halo_candidates(g, owner, parts)
+    else:                              # live re-budget: reuse the ranking
+        ranked, affs, counts, cut = ranking
+    halo_sets = [r[:budget] for r in ranked]
+    # affinity IS the owned→halo cut-edge count, so the recovered total is
+    # just the kept prefix sum — no edge rescan needed
+    recovered = int(sum(int(a[:budget].sum()) for a in affs))
+    return PartitionPlan(
+        node_sets=node_sets, owner=owner, method=method,
+        subgraphs=[g.subgraph(ns, feature_leaves=hs)
+                   for ns, hs in zip(node_sets, halo_sets)],
+        cut_edges=cut, halo_counts=counts, halo_budget=budget,
+        halo_sets=halo_sets, recovered_edges=recovered,
+        halo_ranked=ranked, halo_ranked_aff=affs)
+
 
 def plan_partitions(g: Graph, parts: int, method: str = "locality",
-                    seed: int = 0) -> PartitionPlan:
-    """Build the full plan: assignment, induced subgraphs, cut/halo stats."""
+                    seed: int = 0, halo_budget: int = 0) -> PartitionPlan:
+    """Build the full plan: assignment, induced subgraphs (halo-augmented
+    when ``halo_budget > 0``), cut/halo stats."""
     if method not in _METHODS:
         raise ValueError(f"unknown partition method {method!r}; "
                          f"expected one of {sorted(_METHODS)}")
@@ -157,18 +258,7 @@ def plan_partitions(g: Graph, parts: int, method: str = "locality",
     owner = -np.ones(g.num_nodes, np.int32)
     for p, ns in enumerate(node_sets):
         owner[ns] = p
-    src = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
-    cross = owner[src] != owner[g.indices]
-    cut = int(cross.sum())
-    halo = []
-    for p in range(len(node_sets)):
-        # nodes outside p adjacent to p (either edge direction)
-        out_nb = g.indices[cross & (owner[src] == p)]
-        in_src = src[cross & (owner[g.indices] == p)]
-        halo.append(int(len(np.unique(np.concatenate([out_nb, in_src])))))
-    return PartitionPlan(node_sets=node_sets, owner=owner, method=method,
-                         subgraphs=[g.subgraph(ns) for ns in node_sets],
-                         cut_edges=cut, halo_counts=halo)
+    return _finalize_plan(g, node_sets, owner, method, halo_budget)
 
 
 def partition(g: Graph, parts: int, method: str = "bfs",

@@ -55,11 +55,26 @@ class Graph:
         """Node ids sorted by descending out-degree (PaGraph hotness)."""
         return np.argsort(-self.degrees(), kind="stable").astype(np.int32)
 
-    def subgraph(self, nodes: np.ndarray) -> "Graph":
-        """Induced subgraph with LOCAL ids 0..len(nodes)-1 (partitioning)."""
+    def subgraph(self, nodes: np.ndarray,
+                 feature_leaves: np.ndarray = None) -> "Graph":
+        """Induced subgraph with LOCAL ids 0..len(nodes)-1 (partitioning).
+
+        ``feature_leaves``: optional extra nodes appended AFTER ``nodes``
+        as feature-only leaves — reachable through ``nodes``' out-edges
+        but with empty local adjacency, zeroed feature rows (their
+        features are owned elsewhere; graph/partition.py fills them
+        through the halo exchange) and all-False split masks.  With no
+        leaves the result is bit-identical to the plain induced subgraph."""
         nodes = np.asarray(nodes, dtype=np.int32)
+        leaves = (np.asarray(feature_leaves, dtype=np.int32)
+                  if feature_leaves is not None else np.zeros(0, np.int32))
+        aug = np.concatenate([nodes, leaves]) if len(leaves) else nodes
         remap = -np.ones(self.num_nodes, dtype=np.int32)
-        remap[nodes] = np.arange(len(nodes), dtype=np.int32)
+        remap[aug] = np.arange(len(aug), dtype=np.int32)
+        if len(leaves) and (remap[nodes] != np.arange(len(nodes))).any():
+            # a leaf id that is also owned would hijack the owned node's
+            # local id, silently rerouting its edges to an empty leaf row
+            raise ValueError("feature_leaves must be disjoint from nodes")
         indptr = [0]
         idx_out = []
         for v in nodes:
@@ -67,16 +82,29 @@ class Graph:
             nb = nb[nb >= 0]
             idx_out.append(nb)
             indptr.append(indptr[-1] + len(nb))
+        if len(leaves):
+            indptr.extend([indptr[-1]] * len(leaves))
+            features = np.zeros((len(aug), self.feat_dim), np.float32)
+            features[:len(nodes)] = self.features[nodes]
+            off = np.zeros(len(leaves), bool)
+            masks = [np.concatenate([m[nodes], off]) for m in
+                     (self.train_mask, self.val_mask, self.test_mask)]
+            name = f"{self.name}-sub{len(nodes)}+h{len(leaves)}"
+        else:
+            features = self.features[nodes]
+            masks = [self.train_mask[nodes], self.val_mask[nodes],
+                     self.test_mask[nodes]]
+            name = f"{self.name}-sub{len(nodes)}"
         return Graph(
             indptr=np.asarray(indptr, np.int64),
             indices=(np.concatenate(idx_out) if idx_out else
                      np.zeros(0, np.int32)).astype(np.int32),
-            features=self.features[nodes],
-            labels=self.labels[nodes],
-            train_mask=self.train_mask[nodes],
-            val_mask=self.val_mask[nodes],
-            test_mask=self.test_mask[nodes],
-            name=f"{self.name}-sub{len(nodes)}",
+            features=features,
+            labels=self.labels[aug],
+            train_mask=masks[0],
+            val_mask=masks[1],
+            test_mask=masks[2],
+            name=name,
         )
 
     def memory_bytes(self) -> int:
