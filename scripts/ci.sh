@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI entry point — used by .github/workflows/ci.yml and runnable locally.
 #
-#     scripts/ci.sh [lint|docs|fast|full|all]     (default: all)
+#     scripts/ci.sh [lint|docs|kernels|fast|full|all]     (default: all)
 #
 # Lanes:
 #   lint:  `ruff check src tests benchmarks` (config in pyproject.toml);
@@ -10,9 +10,15 @@
 #   docs:  scripts/check_docs.py — every `path.py:symbol` code anchor in
 #          docs/*.md and README.md must resolve (offline-safe, stdlib).
 #          Runs in lane 1 (the fast job) alongside the fast tests.
+#   kernels: the Pallas kernel oracles + the FeaturePlane host/device
+#          parity tests — the focused signal for accelerator-path changes
+#          (also part of the fast job, as its own JUnit artifact).
 #   fast:  everything except tests marked `slow` — the sub-minute signal
 #          for every push.  The CI fast job does NOT install `hypothesis`,
 #          keeping the tests/_hypothesis_compat.py shim path covered.
+#          The kernel/plane files are skipped here (the kernels lane owns
+#          them) so the fast job never runs the interpret-mode Pallas
+#          sweeps twice; `full` still runs everything in one invocation.
 #   full:  the tier-1 command from ROADMAP.md, including the slow
 #          pipeline/system tests.  This is the merge bar.
 #
@@ -55,8 +61,14 @@ case "$LANE" in
         run_lane lint lint_cmd ;;
     docs)
         run_lane docs python scripts/check_docs.py ;;
+    kernels)
+        run_lane kernels python -m pytest -x -q \
+            tests/test_kernels.py tests/test_feature_plane.py \
+            --junitxml "$ART/junit_kernels.xml" ;;
     fast)
         run_lane fast python -m pytest -x -q -m "not slow" \
+            --ignore tests/test_kernels.py \
+            --ignore tests/test_feature_plane.py \
             --junitxml "$ART/junit_fast.xml" ;;
     full)
         run_lane full python -m pytest -x -q \
@@ -64,12 +76,17 @@ case "$LANE" in
     all)
         run_lane lint lint_cmd
         run_lane docs python scripts/check_docs.py
+        run_lane kernels python -m pytest -x -q \
+            tests/test_kernels.py tests/test_feature_plane.py \
+            --junitxml "$ART/junit_kernels.xml"
         run_lane fast python -m pytest -x -q -m "not slow" \
+            --ignore tests/test_kernels.py \
+            --ignore tests/test_feature_plane.py \
             --junitxml "$ART/junit_fast.xml"
         run_lane full python -m pytest -x -q \
             --junitxml "$ART/junit_full.xml" ;;
     *)
-        echo "usage: scripts/ci.sh [lint|docs|fast|full|all]" >&2
+        echo "usage: scripts/ci.sh [lint|docs|kernels|fast|full|all]" >&2
         exit 2 ;;
 esac
 echo "--- $ART/timing.csv ---"

@@ -41,6 +41,17 @@ class AutotuneConfig:
     max_workers: int = 4
     max_cache_mb: float = 64.0
     max_bias_rate: float = 16.0
+    # > 0 adds the `batch_size` knob (applies live via Pipeline.reconfigure)
+    max_batch_size: int = 0
+    # adds the `sampling_device` knob: live feature-plane swap (cpu ↔
+    # device Pallas gather) without dropping a batch
+    tune_sampling_device: bool = False
+    # MEASURE-phase throughput: "modeled" (Eqs. 2/4 from measured stage
+    # times — the only honest number on a 1-core host, where threads cannot
+    # physically overlap), "wallclock" (PipelineStats.throughput_steps_per_s),
+    # or "auto" — wall-clock when the process can use > 1 CPU (scheduler
+    # affinity mask, so cgroup-pinned containers count as 1-core)
+    throughput_source: str = "auto"
     # > 1 adds the `partitions` knob: applied through the restart-capable
     # path (checkpoint → rebuild trainer → restore), not a live swap
     max_partitions: int = 1
@@ -74,7 +85,7 @@ class GNNConfig:
     bias_rate: float = 2.0              # γ ≥ 1; 1 → plain random sampling
     cache_volume_mb: float = 40.0       # Θ
     cache_policy: str = "static"        # static (hotness) | fifo
-    sampling_device: str = "cpu"        # cpu | device
+    sampling_device: str = "cpu"        # cpu | device | auto (probe jax.devices)
     workers: int = 2
     parallel_mode: str = "seq"          # seq | mode1 | mode2
     partitions: int = 1

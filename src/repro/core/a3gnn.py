@@ -227,15 +227,17 @@ class A3GNNTrainer(TrainerCheckpointMixin):
         """Episode-boundary reconfiguration (autotune controller).
 
         Applies any of (bias_rate γ, cache_volume_mb Θ, parallel_mode,
-        workers, batch_size) to the live trainer: the cache is resized with
-        its hit/miss accounting intact, the sampler bias weight function is
-        rebuilt for the new γ, and — when ``pipe`` is given — the executor
-        drains and swaps mode/workers without dropping a batch.
-        ``halo_budget`` is recorded but inert at one partition (no cut
-        edges to recover; core/multipart.py implements the real swap)."""
+        workers, batch_size, sampling_device) to the live trainer: the
+        cache is resized with its hit/miss accounting intact, the sampler
+        bias weight function is rebuilt for the new γ, and — when ``pipe``
+        is given — the executor drains and swaps mode/workers/feature-plane
+        backend without dropping a batch.  ``halo_budget`` is recorded but
+        inert at one partition (no cut edges to recover; core/multipart.py
+        implements the real swap)."""
         updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
                                          "parallel_mode", "workers",
-                                         "batch_size") if k in knobs}
+                                         "batch_size", "sampling_device")
+                   if k in knobs}
         if "halo_budget" in knobs:
             self.cfg = self.cfg.replace(halo_budget=int(knobs["halo_budget"]))
         if "workers" in updates:
@@ -260,7 +262,8 @@ class A3GNNTrainer(TrainerCheckpointMixin):
             pipe.reconfigure(mode=updates.get("parallel_mode"),
                              workers=updates.get("workers"),
                              cache=self.cache, weight_fn=self.weight_fn,
-                             batch_size=updates.get("batch_size"))
+                             batch_size=updates.get("batch_size"),
+                             sampling_device=updates.get("sampling_device"))
 
     # ------------------------------------------------------------------
     def fit_autotuned(self, autotune=None, seed: Optional[int] = None):

@@ -24,10 +24,14 @@ Each episode ``e = 0, 1, …`` goes through four phases:
    the executor switches parallel mode / worker count.  Training then
    resumes — parameters, optimizer state and step count all carry over.
 3. **MEASURE** — ``steps_per_episode`` real training steps run under the
-   new configuration.  Throughput is modeled from the *measured* per-stage
-   times via Eqs. 2/4 (the 1-core container cannot physically overlap
-   threads), memory from Eqs. 3/5 with the measured peak batch size, and
-   accuracy from a held-out evaluation.
+   new configuration.  Throughput comes from the wall clock
+   (``PipelineStats.throughput_steps_per_s``) on multi-core hosts, where
+   threads physically overlap; on a 1-core host it is modeled from the
+   *measured* per-stage times via Eqs. 2/4 instead (overlap is impossible
+   there, so the wall clock would under-report every parallel mode) —
+   ``resolve_throughput_source`` picks per ``AutotuneConfig.
+   throughput_source``.  Memory comes from Eqs. 3/5 with the measured
+   peak batch size, accuracy from a held-out evaluation.
 4. **FEEDBACK** — the measured (throughput, memory, accuracy) point is
    appended to the surrogate's training set (which was pre-warmed from the
    analytic models in ``core/perf_model.py`` + ``core/locality.py``) and
@@ -42,6 +46,7 @@ measured Pareto front exactly as in Tab. II.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -50,7 +55,7 @@ import numpy as np
 from repro.configs.gnn import AutotuneConfig
 from repro.core.autotune.pareto import pareto_front
 from repro.core.autotune.ppo import PPOAgent, PPOConfig, VIOLATION_REWARD
-from repro.core.autotune.space import Knob, Space, MODES
+from repro.core.autotune.space import Knob, Space, DEVICES, MODES
 from repro.core.autotune.surrogate import Surrogate
 from repro.core.locality import accuracy_drop_model, expected_hit_rate
 from repro.core.perf_model import (MemoryTerms, StageTimes,
@@ -60,20 +65,55 @@ from repro.core.perf_model import (MemoryTerms, StageTimes,
 # relative cost of a cache hit vs a host fetch during batch generation —
 # scales the analytic t_batch estimate used only for surrogate pre-warming
 HIT_SPEEDUP = 0.6
+# prior for the device plane's batch-generation advantage (resident rows
+# gathered in HBM instead of copied through host memory) — surrogate
+# pre-warm only; MEASURE always uses the real pipeline
+DEVICE_BATCH_SPEEDUP = 0.7
+
+
+def available_cpus() -> int:
+    """CPUs actually usable by THIS process: the scheduler affinity mask
+    (respects cgroup/taskset pinning — a 1-CPU container on an 8-core host
+    must count as 1), falling back to ``os.cpu_count()`` where affinity is
+    not exposed (macOS)."""
+    if hasattr(os, "sched_getaffinity"):
+        return len(os.sched_getaffinity(0)) or 1
+    return os.cpu_count() or 1
+
+
+def resolve_throughput_source(acfg: AutotuneConfig) -> str:
+    """MEASURE-phase throughput source: ``modeled`` (Eqs. 2/4 from measured
+    stage times) or ``wallclock`` (``PipelineStats.throughput_steps_per_s``).
+    ``auto`` picks wall-clock whenever the process can use more than one
+    core — threads can physically overlap there, so the wall clock is the
+    truth; on a 1-core host overlap is impossible and the model is the
+    only honest multi-core prediction."""
+    src = acfg.throughput_source
+    if src == "auto":
+        src = "wallclock" if available_cpus() > 1 else "modeled"
+    if src not in ("modeled", "wallclock"):
+        raise ValueError(f"unknown throughput_source: {src!r}")
+    return src
 
 
 def episode_space(acfg: AutotuneConfig) -> Space:
-    """The tunable subset of Table I.  γ, Θ, mode, workers — and, with
-    ``max_halo_budget > 0``, the halo budget — swap live at an episode
-    boundary; with ``max_partitions > 1`` the partition count joins the
-    space and is applied through the restart-capable path (checkpoint →
-    rebuild trainer → restore)."""
+    """The tunable subset of Table I.  γ, Θ, mode, workers — and, when
+    gated on, batch size, the sampling device (feature-plane backend) and
+    the halo budget — swap live at an episode boundary; with
+    ``max_partitions > 1`` the partition count joins the space and is
+    applied through the restart-capable path (checkpoint → rebuild
+    trainer → restore)."""
     knobs = [
         Knob("bias_rate", "log", 1.0, acfg.max_bias_rate),
         Knob("cache_volume_mb", "log", 0.05, acfg.max_cache_mb),
         Knob("parallel_mode", "cat", choices=MODES),
         Knob("workers", "int", 1, acfg.max_workers),
     ]
+    if acfg.max_batch_size > 0:
+        knobs.append(Knob("batch_size", "int",
+                          min(16, acfg.max_batch_size), acfg.max_batch_size))
+    if acfg.tune_sampling_device:
+        knobs.append(Knob("sampling_device", "cat", choices=DEVICES))
     if acfg.max_partitions > 1:
         knobs.append(Knob("partitions", "int", 1, acfg.max_partitions))
     if acfg.max_halo_budget > 0:
@@ -198,6 +238,10 @@ class AutotuneController:
                                    if self.tr.cache is not None else 0.0),
                "parallel_mode": self.pipe.mode,
                "workers": self.pipe.workers_n}
+        if "batch_size" in self._knob_names:
+            cfg["batch_size"] = int(self.pipe.batch_size)
+        if "sampling_device" in self._knob_names:
+            cfg["sampling_device"] = str(self.pipe.sampling_device)
         if "partitions" in self._knob_names:
             cfg["partitions"] = int(c.partitions)
         if "halo_budget" in self._knob_names:
@@ -229,7 +273,14 @@ class AutotuneController:
         # batch generation is fetch-dominated: hits skip the host copy
         scale = (1.0 - HIT_SPEEDUP * hit) / max(1.0 - HIT_SPEEDUP * base_hit,
                                                 1e-9)
-        st = StageTimes(st0.t_sample, st0.t_batch * scale, st0.t_train)
+        # device plane: resident rows gather in HBM instead of host memory
+        if cfg.get("sampling_device") == "device":
+            scale *= DEVICE_BATCH_SPEEDUP
+        # per-step stage costs scale ~linearly with the mini-batch size
+        cur_b = max(int(getattr(self.tr.cfg, "batch_size", 1)), 1)
+        bscale = max(int(cfg.get("batch_size", cur_b)), 1) / cur_b
+        st = StageTimes(st0.t_sample * bscale, st0.t_batch * scale * bscale,
+                        st0.t_train * bscale)
         step_t = bottleneck_step_time(cfg["parallel_mode"], st,
                                       int(cfg["workers"]))
         # scale-out: p partitions each run the per-device pipeline, so
@@ -241,7 +292,7 @@ class AutotuneController:
                                  getattr(self.tr.cfg, "halo_budget", 0))), 0)
         mt = MemoryTerms(
             cache_bytes=cfg["cache_volume_mb"] * 2**20,
-            batch_bytes=max(base_stats.peak_batch_bytes, 1),
+            batch_bytes=max(base_stats.peak_batch_bytes * bscale, 1),
             model_bytes=self.tr.model_bytes(base_stats),
             runtime_bytes=self.tr.runtime_bytes())
         mem = {"seq": memory_seq,
@@ -309,12 +360,20 @@ class AutotuneController:
             if c is not None:
                 c.stats.reset()
         stats = self.pipe.run(max_steps=self.acfg.steps_per_episode)
-        st = stats.stage_times()
-        step_t = bottleneck_step_time(self.pipe.mode, st, self.pipe.workers_n)
-        # multi-partition pipelines report aggregate (fleet) throughput
-        scale = getattr(self.pipe, "scale_factor", 1)
+        if resolve_throughput_source(self.acfg) == "wallclock":
+            # real multi-core host: threads overlap, the wall clock is the
+            # truth (stats.steps counts per-partition mini-batches, so this
+            # is already the aggregate fleet rate)
+            throughput = stats.throughput_steps_per_s()
+        else:
+            st = stats.stage_times()
+            step_t = bottleneck_step_time(self.pipe.mode, st,
+                                          self.pipe.workers_n)
+            # multi-partition pipelines report aggregate (fleet) throughput
+            throughput = getattr(self.pipe, "scale_factor", 1) \
+                / max(step_t, 1e-9)
         metrics = {
-            "throughput": scale / max(step_t, 1e-9),
+            "throughput": throughput,
             "memory": self.tr.modeled_memory(stats, mode=self.pipe.mode,
                                              workers=self.pipe.workers_n),
             "accuracy": self.tr.evaluate(max_batches=self.acfg.eval_batches),

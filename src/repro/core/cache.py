@@ -50,8 +50,11 @@ class FeatureCache:
 
     def _alloc(self, volume_mb: float):
         """(Re)allocate storage for ``volume_mb`` and warm it per policy.
-        ``self.stats`` is untouched — hit/miss accounting survives resizes."""
+        ``self.stats`` is untouched — hit/miss accounting survives resizes.
+        ``version`` advances on every (re)allocation so device-resident
+        mirrors (core/feature_plane.py DeviceFeaturePlane) know to re-sync."""
         graph = self.g
+        self.version = getattr(self, "version", -1) + 1
         self.volume_mb = float(volume_mb)
         row_bytes = graph.feat_dim * 4
         self.capacity = max(int(volume_mb * 2**20 / row_bytes), 0)
@@ -114,16 +117,25 @@ class FeatureCache:
         miss_ids = ids[~hit]
         if len(miss_ids):
             out[~hit] = self.g.features[miss_ids]
+        self.account_fetch(hit, miss_ids)
+        return out
+
+    def account_fetch(self, hit: np.ndarray, miss_ids: np.ndarray):
+        """Hit/miss/byte accounting + FIFO insertion for one fetch of
+        ``len(hit)`` ids.  Shared by ``fetch`` and the device feature plane
+        (core/feature_plane.py), which must stay stats-exact with it —
+        keep every accounting change in THIS one place."""
         row_bytes = self.g.feat_dim * 4
-        self.stats.hits += int(hit.sum())
-        self.stats.misses += int(len(ids) - hit.sum())
-        self.stats.bytes_from_cache += int(hit.sum()) * row_bytes
+        n_hit = int(hit.sum())
+        self.stats.hits += n_hit
+        self.stats.misses += int(len(hit) - n_hit)
+        self.stats.bytes_from_cache += n_hit * row_bytes
         self.stats.bytes_from_host += int(len(miss_ids)) * row_bytes
         if self.policy == "fifo" and self.capacity and len(miss_ids):
             self._fifo_insert(np.unique(miss_ids))
-        return out
 
     def _fifo_insert(self, ids: np.ndarray):
+        self.version += 1               # slot map mutates → mirrors re-sync
         for v in ids:
             slot = self._fifo_head
             old = self.slot_owner[slot]

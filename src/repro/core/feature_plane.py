@@ -1,0 +1,228 @@
+"""FeaturePlane — the pluggable feature-fetch seam of the batch-generation
+hot path (paper §III-A/B; the "gather" stage of sample → gather → transfer).
+
+Every consumer of node features goes through ONE interface:
+
+  * ``HostFeaturePlane``   — today's numpy path: ``FeatureCache.fetch``
+    when a cache is configured, a direct host-store gather otherwise.
+    Bit-exact with the pre-plane code (the regression anchor).
+  * ``DeviceFeaturePlane`` — the cache table and the slot map (device map)
+    live as jax device arrays; a batch fetch looks slots up on device and
+    gathers resident rows with the Pallas kernel
+    (``kernels/gather.cache_gather``), falling back to the host feature
+    store for misses.  Accounting, FIFO insertion and resize semantics are
+    delegated to the SAME ``FeatureCache`` bookkeeping, so the two planes
+    are bit-exact and stats-exact on the same request stream.
+
+``make_feature_plane`` picks the backend from
+``GNNConfig.sampling_device`` (``cpu | device | auto`` — auto probes
+``jax.devices()`` and chooses the device plane only when a non-CPU
+accelerator is attached; the device plane still RUNS on CPU hosts through
+the kernel's interpret mode, which is what the parity tests exercise).
+
+Reconfiguration contract (the autotune controller's live swaps):
+
+  * ``resize``/γ-swap — the underlying ``FeatureCache`` mutates in place;
+    the device plane detects the mutation through ``FeatureCache.version``
+    and re-uploads, DELETING the stale device buffers first (the donation
+    step — a live Θ sweep must not accumulate dead cache tables in HBM).
+  * plane swap — ``Pipeline.reconfigure(sampling_device=...)`` drains the
+    executor and rebuilds the plane around the same cache object, so
+    hit/miss accounting survives a cpu↔device migration.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cache import FeatureCache
+from repro.graph.storage import Graph
+
+# device-plane gather is issued in bounded row chunks: each distinct padded
+# shape costs one jit trace (expensive in interpret mode), so chunking plus
+# pow2 bucketing of the tail keeps the set of compiled shapes small and
+# independent of the batch-size schedule
+GATHER_CHUNK_ROWS = 2048
+_MIN_ROWS = 8
+
+
+def _bucket(n: int) -> int:
+    """Round ``n`` up to a pow2 (≥ 8) so jit retraces stay bounded."""
+    return max(1 << (n - 1).bit_length(), _MIN_ROWS)
+
+
+class FeaturePlane:
+    """Backend-pluggable feature-fetch interface (host implementation).
+
+    ``fetch`` is the hot-path read (through the cache, with accounting);
+    ``fill_rows`` is the write side used by the halo exchange — it updates
+    the host store AND any cache-resident copy of the written rows, so a
+    fill is visible no matter which backend serves the next fetch.
+    """
+
+    backend = "cpu"
+
+    def __init__(self, graph: Graph, cache: Optional[FeatureCache] = None):
+        self.graph = graph
+        self.cache = cache
+
+    # -- reads ---------------------------------------------------------------
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """Gather features for ``ids`` (n,) → (n, F) float32."""
+        if self.cache is not None:
+            return self.cache.fetch(ids)
+        return self.graph.features[np.asarray(ids, dtype=np.int64)]
+
+    # -- writes (halo fills / streaming updates) -----------------------------
+    def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
+        """Overwrite feature rows ``ids`` in the host store, propagating to
+        cache-resident copies (and, on the device plane, invalidating the
+        device mirror)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        self.graph.features[ids] = rows
+        c = self.cache
+        if c is not None and c.capacity:
+            slots = c.device_map[ids]
+            hit = slots >= 0
+            if hit.any():
+                c.storage[slots[hit]] = rows[hit]
+                c.version += 1          # device mirrors must re-sync
+
+    # -- reconfiguration -----------------------------------------------------
+    def resize(self, volume_mb: float, keep_residents: bool = True):
+        """Episode-boundary Θ swap, routed through the plane so backend
+        state (device mirrors) tracks the cache."""
+        if self.cache is not None:
+            self.cache.resize(volume_mb, keep_residents=keep_residents)
+
+    @property
+    def stats(self):
+        return self.cache.stats if self.cache is not None else None
+
+
+# back-compat alias: the host plane IS the base implementation
+HostFeaturePlane = FeaturePlane
+
+
+class DeviceFeaturePlane(FeaturePlane):
+    """Device-resident gather: slot map + cache table as jax arrays, batch
+    lookup through the Pallas ``cache_gather`` kernel, miss fallback to the
+    host feature store.
+
+    The ``FeatureCache`` object stays the single source of truth for the
+    slot assignment, the replacement policy and the hit/miss accounting —
+    this plane mirrors (storage, device_map) to the device and re-uploads
+    whenever ``cache.version`` moves (resize, FIFO insertion, halo fill).
+    Stale device buffers are deleted before the re-upload so a live
+    autotune sweep never holds two cache tables at once.  The static
+    policy is the intended device configuration (read-only table between
+    episodes); FIFO works but re-uploads after every inserting fetch.
+    """
+
+    backend = "device"
+
+    def __init__(self, graph: Graph, cache: Optional[FeatureCache] = None,
+                 use_pallas: bool = True, interpret: Optional[bool] = None):
+        super().__init__(graph, cache)
+        import jax
+        self.use_pallas = use_pallas
+        # interpret mode unless a real accelerator backs the default device
+        self.interpret = (interpret if interpret is not None else
+                          jax.devices()[0].platform not in ("tpu", "gpu"))
+        self._dev_table = None
+        self._dev_slots = None
+        self._version = -1
+        # mode1 batch-gen workers share the plane: the mirror delete +
+        # re-upload must never race a gather in another thread (a deleted
+        # buffer mid-kernel is fatal, unlike the host path's benign numpy
+        # interleavings), so sync + gather + insert run under one lock
+        self._lock = threading.Lock()
+
+    # -- device mirror -------------------------------------------------------
+    def _ensure_synced(self):
+        c = self.cache
+        if self._dev_table is not None and self._version == c.version:
+            return
+        import jax
+        for buf in (self._dev_table, self._dev_slots):
+            if buf is not None:
+                buf.delete()             # donate the stale buffers
+        self._dev_table = jax.device_put(c.storage)
+        self._dev_slots = jax.device_put(c.device_map)
+        self._version = c.version
+
+    def device_bytes(self) -> int:
+        """HBM footprint of the mirror (cache table + slot map)."""
+        c = self.cache
+        if c is None or not c.capacity:
+            return 0
+        return c.storage.nbytes + c.device_map.nbytes
+
+    # -- reads ---------------------------------------------------------------
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        c = self.cache
+        if c is None or not c.capacity:
+            # nothing resident on device — same contract as the host plane
+            return super().fetch(ids)
+        with self._lock:
+            return self._fetch_locked(ids, c)
+
+    def _fetch_locked(self, ids: np.ndarray, c: FeatureCache) -> np.ndarray:
+        import jax.numpy as jnp
+        from repro.kernels.gather.ops import cache_gather
+        self._ensure_synced()
+        n = len(ids)
+        out = np.empty((n, self.graph.feat_dim), np.float32)
+        miss = np.empty(n, dtype=bool)
+        for a in range(0, n, GATHER_CHUNK_ROWS):
+            chunk = ids[a:a + GATHER_CHUNK_ROWS]
+            m = len(chunk)
+            mp = min(_bucket(m), GATHER_CHUNK_ROWS)
+            # out-of-range pad ids resolve to slot -1 (a miss) on device
+            pad = np.full(mp, self.graph.num_nodes, dtype=np.int64)
+            pad[:m] = chunk
+            slots = jnp.take(self._dev_slots, jnp.asarray(pad),
+                             mode="fill", fill_value=-1)
+            rows, miss_c = cache_gather(slots, self._dev_table,
+                                        use_pallas=self.use_pallas,
+                                        interpret=self.interpret)
+            out[a:a + m] = np.asarray(rows)[:m]
+            miss[a:a + m] = np.asarray(miss_c)[:m].astype(bool)
+        miss_ids = ids[miss]
+        if len(miss_ids):
+            out[miss] = self.graph.features[miss_ids]
+        # one accounting implementation for both planes (stats-exactness
+        # is a tested invariant); a FIFO insert bumps version → re-sync
+        c.account_fetch(~miss, miss_ids)
+        return out
+
+    def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
+        with self._lock:
+            super().fill_rows(ids, rows)
+
+    def resize(self, volume_mb: float, keep_residents: bool = True):
+        with self._lock:
+            super().resize(volume_mb, keep_residents=keep_residents)
+
+
+def make_feature_plane(graph: Graph, cache: Optional[FeatureCache],
+                       sampling_device: str = "cpu") -> FeaturePlane:
+    """Backend factory for the batch-generation gather stage.
+
+    ``cpu`` → ``HostFeaturePlane``; ``device`` → ``DeviceFeaturePlane``;
+    ``auto`` probes ``jax.devices()`` and picks the device plane only when
+    a real accelerator (TPU/GPU) is attached.
+    """
+    if sampling_device == "auto":
+        import jax
+        has_accel = any(d.platform in ("tpu", "gpu") for d in jax.devices())
+        sampling_device = "device" if has_accel else "cpu"
+    if sampling_device == "device":
+        return DeviceFeaturePlane(graph, cache)
+    if sampling_device in ("cpu", "host"):
+        return HostFeaturePlane(graph, cache)
+    raise ValueError(f"unknown sampling_device: {sampling_device!r} "
+                     f"(expected cpu | device | auto)")

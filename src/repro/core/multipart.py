@@ -120,6 +120,14 @@ class MultiPipeline:
         return self.pipes[0].workers_n
 
     @property
+    def batch_size(self) -> int:
+        return self.pipes[0].batch_size
+
+    @property
+    def sampling_device(self) -> str:
+        return self.pipes[0].sampling_device
+
+    @property
     def scale_factor(self) -> int:
         return len(self.tr.slots)
 
@@ -131,7 +139,8 @@ class MultiPipeline:
 
     def reconfigure(self, mode: Optional[str] = None,
                     workers: Optional[int] = None, cache=None, weight_fn=None,
-                    batch_size: Optional[int] = None):
+                    batch_size: Optional[int] = None,
+                    sampling_device: Optional[str] = None):
         """Drain + swap each partition pipeline.  Per-partition cache and
         bias always re-sync from the slots (they are per-partition state —
         the ``cache``/``weight_fn`` arguments of the single-pipeline
@@ -140,7 +149,8 @@ class MultiPipeline:
         for slot in self.tr.slots:
             slot.pipe.reconfigure(mode=mode, workers=workers,
                                   cache=slot.cache, weight_fn=slot.weight_fn,
-                                  batch_size=batch_size)
+                                  batch_size=batch_size,
+                                  sampling_device=sampling_device)
 
     def drain(self):
         for p in self.pipes:
@@ -210,7 +220,6 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.mesh = make_partition_mesh(self.plan.parts)
         self._allreduce = grad_allreduce(self.mesh)
         self._halo_exchange = halo_all_to_all(self.mesh)
-        self.halo_exchange_bytes = self._fill_halo_features()
         rng = jax.random.PRNGKey(seed)
         self.decls = decls_gnn(cfg)
         self.params = init_params(self.decls, rng)
@@ -221,6 +230,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self._eval = make_eval_fn(cfg)
         self.slots = [self._make_slot(p, sub) for p, sub in
                       enumerate(self.plan.subgraphs)]
+        self.halo_exchange_bytes = self._fill_halo_features()
         self.eta = float(np.mean(self.plan.etas(graph)))
         self.global_steps = 0
 
@@ -229,15 +239,20 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         """Move the budgeted boundary feature rows through the partition
         mesh (``halo_all_to_all``): each subgraph's halo rows — zeroed by
         the plan, owned by another partition — are filled from the owner's
-        feature store.  Returns the exchange volume in bytes."""
+        feature store, THROUGH each partition's feature plane
+        (``FeaturePlane.fill_rows``), so cache-resident copies update and
+        device mirrors re-sync no matter which backend serves the next
+        fetch.  Returns the exchange volume in bytes."""
         if self.plan.halo_rows == 0:
             return 0
         owned = [sub.features[:len(ns)] for sub, ns in
                  zip(self.plan.subgraphs, self.plan.node_sets)]
         halo_feats, volume = self._halo_exchange(self.plan, owned)
-        for sub, ns, rows in zip(self.plan.subgraphs, self.plan.node_sets,
-                                 halo_feats):
-            sub.features[len(ns):] = rows
+        for slot, ns, rows in zip(self.slots, self.plan.node_sets,
+                                  halo_feats):
+            if len(rows):
+                local = np.arange(len(ns), len(ns) + len(rows))
+                slot.pipe.plane.fill_rows(local, rows)
         return int(volume)
 
     def _make_slot(self, p: int, sub: Graph) -> PartitionSlot:
@@ -461,8 +476,9 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
                         pipe: Optional[MultiPipeline] = None):
         """LIVE halo-budget swap: re-budget the existing assignment
         (``PartitionPlan.with_halo_budget`` — owner/node_sets untouched, so
-        no re-partition and no restart path), refill halo rows through the
-        mesh, and rebuild the per-partition slots in place.  Params,
+        no re-partition and no restart path), rebuild the per-partition
+        slots in place, and refill halo rows through the mesh into each
+        slot's feature plane.  Params,
         optimizer state and cache hit accounting carry over; in-flight
         batches are drained first (nothing dropped).  Halo accounting
         starts FRESH — it describes the current halo topology, and a
@@ -479,9 +495,9 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
             slot.pipe.shutdown()
         self.plan = self.plan.with_halo_budget(self.full_graph, budget)
         self.cfg = self.cfg.replace(halo_budget=budget)
-        self.halo_exchange_bytes = self._fill_halo_features()
         self.slots = [self._make_slot(p, sub) for p, sub in
                       enumerate(self.plan.subgraphs)]
+        self.halo_exchange_bytes = self._fill_halo_features()
         for new, prev in zip(self.slots, old):
             if new.cache is not None and prev.cache is not None:
                 new.cache.stats = prev.cache.stats   # accounting survives
@@ -496,7 +512,8 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
             self.set_halo_budget(int(knobs["halo_budget"]), pipe)
         updates = {k: knobs[k] for k in ("bias_rate", "cache_volume_mb",
                                          "parallel_mode", "workers",
-                                         "batch_size") if k in knobs}
+                                         "batch_size", "sampling_device")
+                   if k in knobs}
         if "workers" in updates:
             updates["workers"] = int(updates["workers"])
         if "batch_size" in updates:
@@ -521,7 +538,8 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         if pipe is not None:
             pipe.reconfigure(mode=updates.get("parallel_mode"),
                              workers=updates.get("workers"),
-                             batch_size=updates.get("batch_size"))
+                             batch_size=updates.get("batch_size"),
+                             sampling_device=updates.get("sampling_device"))
 
     def fit_autotuned(self, autotune=None, seed: Optional[int] = None):
         """Online auto-tuning over the partition fleet (paper §III-C); with

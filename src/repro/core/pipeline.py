@@ -39,6 +39,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.cache import FeatureCache
+from repro.core.feature_plane import FeaturePlane, make_feature_plane
 from repro.core.sampling import NeighborSampler, MiniBatch, seed_loader
 from repro.graph.batch import generate_batch, batch_bytes
 
@@ -99,7 +100,7 @@ class _SampleWorker(threading.Thread):
                 mb = self.sampler.sample(seeds)
                 t1 = time.perf_counter()
                 if self.do_batchgen:
-                    mb = generate_batch(mb, self.pipe.cache, self.pipe.graph)
+                    mb = generate_batch(mb, self.pipe.plane, self.pipe.graph)
                 t2 = time.perf_counter()
                 with self.pipe._lock:
                     self.pipe.stats.t_sample += t1 - t0
@@ -119,10 +120,16 @@ class Pipeline:
 
     def __init__(self, graph, cfg, train_fn: Callable[[MiniBatch], tuple],
                  cache: Optional[FeatureCache] = None,
-                 weight_fn=None, seed: int = 0):
+                 weight_fn=None, seed: int = 0,
+                 plane: Optional[FeaturePlane] = None):
         self.graph, self.cfg = graph, cfg
         self.train_fn = train_fn
-        self.cache = cache
+        # the feature plane is the ONLY seam batch generation fetches
+        # through; `cache` remains the constructor currency (trainers own
+        # the cache object) and the plane wraps it per sampling_device
+        self.plane = plane if plane is not None else make_feature_plane(
+            graph, cache, getattr(cfg, "sampling_device", "cpu"))
+        self.sampling_device = self.plane.backend
         self.weight_fn = weight_fn
         self.seed = seed
         self.mode = cfg.parallel_mode
@@ -147,6 +154,11 @@ class Pipeline:
     def _make_sampler(self, s=0):
         return NeighborSampler(self.graph, self.cfg.fanout,
                                weight_fn=self.weight_fn, seed=self.seed + s)
+
+    @property
+    def cache(self) -> Optional[FeatureCache]:
+        """The cache behind the plane (hit/miss accounting lives there)."""
+        return self.plane.cache
 
     # -- stats windows -------------------------------------------------------
     def begin_stats(self) -> PipelineStats:
@@ -220,7 +232,7 @@ class Pipeline:
             t0 = time.perf_counter()
             mb = self._seq_sampler.sample(seeds)
             t1 = time.perf_counter()
-            mb = generate_batch(mb, self.cache, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph)
             t2 = time.perf_counter()
             loss, acc = self.train_fn(mb)
             t3 = time.perf_counter()
@@ -243,13 +255,13 @@ class Pipeline:
                 self._spare = self._make_sampler(997)  # straggler/failure spare
             t0 = time.perf_counter()
             mb = self._spare.sample(seeds)
-            mb = generate_batch(mb, self.cache, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph)
             with self._lock:
                 self.stats.reissued += 1
                 self.stats.t_sample += time.perf_counter() - t0
         elif not do_batchgen:                          # mode2: serialize batchgen
             t0 = time.perf_counter()
-            mb = generate_batch(mb, self.cache, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph)
             with self._lock:
                 self.stats.t_batch += time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -275,12 +287,15 @@ class Pipeline:
     def reconfigure(self, mode: Optional[str] = None,
                     workers: Optional[int] = None,
                     cache: Any = _UNSET, weight_fn: Any = _UNSET,
-                    batch_size: Optional[int] = None):
+                    batch_size: Optional[int] = None,
+                    sampling_device: Optional[str] = None):
         """Drain → swap knobs → (lazy) resume.
 
         Safe at any point: all in-flight batches are trained under the OLD
         configuration first, then the pool is torn down so the next submit
-        rebuilds samplers with the new bias/cache."""
+        rebuilds samplers with the new bias/cache.  ``sampling_device``
+        swaps the feature-plane backend LIVE (cpu ↔ device) around the same
+        cache object — hit/miss accounting survives the migration."""
         self.drain()
         self._stop_pool()
         self._spare = None
@@ -289,8 +304,19 @@ class Pipeline:
             self.mode = mode
         if workers is not None:
             self.workers_n = max(int(workers), 1)
-        if cache is not _UNSET:
-            self.cache = cache
+        if cache is not _UNSET or sampling_device is not None:
+            if sampling_device is not None:
+                self.sampling_device = sampling_device
+            new_cache = self.plane.cache if cache is _UNSET else cache
+            # rebuild only on a real change — a same-cache re-sync (every
+            # apply_live_config passes cache=) must keep the existing plane
+            # so a device mirror is not pointlessly re-uploaded; in-place
+            # cache mutation is covered by FeatureCache.version
+            if (new_cache is not self.plane.cache
+                    or self.sampling_device != self.plane.backend):
+                self.plane = make_feature_plane(self.graph, new_cache,
+                                                self.sampling_device)
+                self.sampling_device = self.plane.backend
         if weight_fn is not _UNSET:
             self.weight_fn = weight_fn
         if batch_size is not None:

@@ -2,26 +2,34 @@
 
 Locality-aware sampling concentrates repeated node ids, so deduplication
 shrinks the mini-batch substantially (the paper's memory win).  Features for
-the input hop are fetched THROUGH the cache (hit/miss accounting feeds both
-throughput and the bias feedback loop).
+the input hop are fetched THROUGH the feature plane — the single
+backend-pluggable seam (core/feature_plane.py) whose host backend wraps the
+cache (hit/miss accounting feeds both throughput and the bias feedback
+loop) and whose device backend runs the Pallas cache gather.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional, Union
 
 import numpy as np
 
 from repro.core.cache import FeatureCache
 from repro.core.sampling import MiniBatch
 
+if TYPE_CHECKING:  # typing-only: the graph layer stays jax-free at runtime
+    from repro.core.feature_plane import FeaturePlane
 
-def generate_batch(mb: MiniBatch, cache: Optional[FeatureCache],
+
+def generate_batch(mb: MiniBatch,
+                   plane: Optional[Union["FeaturePlane", FeatureCache]],
                    graph) -> MiniBatch:
     """Fill ``mb.features`` for the input hop (dedup already done by the
-    sampler's np.unique reindexing)."""
-    if cache is not None:
-        feats = cache.fetch(mb.input_ids)
+    sampler's np.unique reindexing).  ``plane`` is a ``FeaturePlane`` (the
+    hot path) or, for back-compat, a bare ``FeatureCache``; ``None`` reads
+    the host store directly (evaluation paths)."""
+    if plane is not None:
+        feats = plane.fetch(mb.input_ids)
     else:
         feats = graph.features[mb.input_ids]
     return dataclasses.replace(mb, features=feats)

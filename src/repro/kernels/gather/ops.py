@@ -1,4 +1,13 @@
-"""jit wrapper: pad n to the id-block, dispatch kernel/ref."""
+"""jit wrapper: pad n to the id-block (and F to the feature block),
+dispatch kernel/ref.
+
+Contract (shared with ref.py, regression-tested in tests/test_kernels.py):
+``slots (n,) int → (features (n, F) of ``cache.dtype``, miss (n,) int32)``
+for ANY n ≥ 1 and ANY feature width F — including widths that are not a
+multiple of the kernel's feature block (e.g. the reddit twin's F=602).
+Padded id rows are synthesized as misses and sliced away; padded feature
+columns are zero and sliced away.
+"""
 from __future__ import annotations
 
 import functools
@@ -15,11 +24,22 @@ def cache_gather(slots, cache, use_pallas: bool = True,
                  interpret: bool = True):
     """slots (n,) int32 (−1 miss) → (features (n,F), miss (n,) int32)."""
     n = slots.shape[0]
+    C, F = cache.shape
     np_ = -(-n // 8) * 8
     slots_p = jnp.pad(slots.astype(jnp.int32), (0, np_ - n),
                       constant_values=-1)
     if use_pallas:
-        out, miss = cache_gather_pallas(slots_p, cache, interpret=interpret)
+        # feature blocking: full-width when one block suffices, else a
+        # lane-aligned block size that divides the (padded) width
+        if F <= 512:
+            block_f, fp = F, F
+        else:
+            block_f = 512 if F % 512 == 0 else 128
+            fp = -(-F // block_f) * block_f
+        cache_p = cache if fp == F else jnp.pad(cache, ((0, 0), (0, fp - F)))
+        out, miss = cache_gather_pallas(slots_p, cache_p, block_f=block_f,
+                                        interpret=interpret)
+        out = out[:, :F]
     else:
         out, miss = cache_gather_ref(slots_p, cache)
-    return out[:n], miss[:n]
+    return out[:n].astype(cache.dtype), miss[:n].astype(jnp.int32)

@@ -90,6 +90,8 @@ def run_gnn(args):
         cfg = cfg.replace(partitions=args.partitions)
     if args.halo_budget is not None:
         cfg = cfg.replace(halo_budget=args.halo_budget)
+    if args.sampling_device is not None:
+        cfg = cfg.replace(sampling_device=args.sampling_device)
     cfg = apply_baseline(cfg, args.baseline)
     graph = dataset_like(cfg, seed=args.seed)
     print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
@@ -198,6 +200,11 @@ def main():
                     help="per-partition cap on boundary feature rows "
                          "exchanged through the mesh (0 = drop cut edges, "
                          "the paper's no-remote-access setting)")
+    ap.add_argument("--sampling-device", default=None,
+                    choices=[None, "cpu", "device", "auto"],
+                    help="feature-plane backend for batch generation: "
+                         "cpu (numpy cache), device (Pallas cache gather), "
+                         "auto (probe jax.devices())")
     ap.add_argument("--autotune", action="store_true",
                     help="run the online auto-tuning controller (§III-C)")
     ap.add_argument("--episodes-autotune", type=int, default=4)

@@ -154,6 +154,10 @@ def test_pareto_frontier_points_dominate_no_other(n, seed):
 def test_episode_space_decodes_live_knobs():
     acfg = AutotuneConfig()
     sp = episode_space(acfg)
+    knob_names = {k.name for k in sp.knobs}
+    # batch_size / sampling_device knobs stay out of the space until gated on
+    assert "batch_size" not in knob_names
+    assert "sampling_device" not in knob_names
     rng = np.random.default_rng(0)
     for u in sp.sample(rng, 32):
         cfg = sp.decode(u)
@@ -161,6 +165,79 @@ def test_episode_space_decodes_live_knobs():
         assert 0.0 < cfg["cache_volume_mb"] <= acfg.max_cache_mb
         assert cfg["parallel_mode"] in ("seq", "mode1", "mode2")
         assert 1 <= cfg["workers"] <= acfg.max_workers
+
+
+def test_episode_space_gates_batch_size_and_sampling_device():
+    acfg = AutotuneConfig(max_batch_size=256, tune_sampling_device=True)
+    sp = episode_space(acfg)
+    rng = np.random.default_rng(0)
+    seen_dev = set()
+    for u in sp.sample(rng, 64):
+        cfg = sp.decode(u)
+        assert 16 <= cfg["batch_size"] <= 256
+        assert cfg["sampling_device"] in ("cpu", "device")
+        seen_dev.add(cfg["sampling_device"])
+    assert seen_dev == {"cpu", "device"}            # both backends reachable
+
+
+def test_batch_size_applies_live(smoke_graph, smoke_gnn_cfg):
+    """The batch_size knob rides Pipeline.reconfigure: applied live, the
+    next run window samples seed batches of the new size."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    pipe = tr.make_pipeline()
+    try:
+        pipe.run(max_steps=2)
+        tr.apply_live_config({"batch_size": 32}, pipe)
+        assert tr.cfg.batch_size == 32 and pipe.batch_size == 32
+        stats = pipe.run(max_steps=2)
+        assert stats.steps == 2
+    finally:
+        pipe.shutdown()
+
+
+def test_throughput_source_auto_switch(monkeypatch):
+    """MEASURE uses wall-clock throughput on multi-core hosts and the
+    Eq. 2/4 model on 1-core hosts; explicit settings always win."""
+    from repro.core.autotune import controller as C
+    acfg = AutotuneConfig()                          # auto
+    monkeypatch.setattr(C, "available_cpus", lambda: 1)
+    assert C.resolve_throughput_source(acfg) == "modeled"
+    monkeypatch.setattr(C, "available_cpus", lambda: 4)
+    assert C.resolve_throughput_source(acfg) == "wallclock"
+    # available_cpus respects the scheduler affinity mask (cgroup pinning)
+    monkeypatch.undo()
+    if hasattr(C.os, "sched_getaffinity"):
+        monkeypatch.setattr(C.os, "sched_getaffinity", lambda pid: {0})
+        assert C.available_cpus() == 1
+        assert C.resolve_throughput_source(acfg) == "modeled"
+    assert C.resolve_throughput_source(
+        acfg.replace(throughput_source="modeled")) == "modeled"
+    assert C.resolve_throughput_source(
+        acfg.replace(throughput_source="wallclock")) == "wallclock"
+    with pytest.raises(ValueError):
+        C.resolve_throughput_source(acfg.replace(throughput_source="x"))
+
+
+def test_measure_respects_throughput_source(smoke_graph, smoke_gnn_cfg):
+    """Pinned "modeled" reproduces the Eq. 2/4 number; pinned "wallclock"
+    reports steps/t_wall — both from the same measured episode."""
+    from repro.core.perf_model import bottleneck_step_time
+    for source in ("modeled", "wallclock"):
+        tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+        pipe = tr.make_pipeline()
+        acfg = AutotuneConfig(steps_per_episode=3, warmup_steps=0,
+                              throughput_source=source, seed=0)
+        ctrl = AutotuneController(tr, pipe, acfg)
+        try:
+            ep = ctrl.measure(0, ctrl._current_config())
+        finally:
+            pipe.shutdown()
+        if source == "modeled":
+            want = 1.0 / max(bottleneck_step_time(
+                pipe.mode, pipe.stats.stage_times(), pipe.workers_n), 1e-9)
+        else:
+            want = pipe.stats.throughput_steps_per_s()
+        assert ep.metrics["throughput"] == pytest.approx(want)
 
 
 # ---------------------------------------------------------------------------

@@ -90,6 +90,29 @@ def test_gather_miss_semantics():
     assert np.asarray(out)[1].sum() == 0            # miss rows zeroed
 
 
+@pytest.mark.parametrize("n,C,F", [(37, 16, 602), (5, 8, 300), (3, 4, 700),
+                                   (100, 32, 602)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_contract_non_multiple_of_block(n, C, F, dtype):
+    """Regression: the miss-path shape/dtype contract must hold for batch
+    sizes that are not a multiple of the id block AND feature widths that
+    are not a multiple of the feature block (reddit F=602, yelp F=300) —
+    the kernel path used to assert out on F % block_f."""
+    cache = jnp.asarray(RNG.normal(0, 1, (C, F))).astype(dtype)
+    slots = jnp.asarray(RNG.integers(-1, C, n), jnp.int32)
+    o1, m1 = cache_gather(slots, cache, use_pallas=True)
+    o2, m2 = cache_gather(slots, cache, use_pallas=False)
+    for o, m in ((o1, m1), (o2, m2)):
+        assert o.shape == (n, F) and m.shape == (n,)
+        assert o.dtype == cache.dtype               # no silent promotion
+        assert m.dtype == jnp.int32
+    assert np.array_equal(np.asarray(o1, np.float32),
+                          np.asarray(o2, np.float32))
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+    # padded-row misses never leak into the sliced result
+    assert np.array_equal(np.asarray(m1), np.asarray(slots) < 0)
+
+
 # ---------------------------------------------------------------------------
 # segment aggregation
 # ---------------------------------------------------------------------------
