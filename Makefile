@@ -8,7 +8,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint docs-check ci autotune-demo bench-quick \
-        scaleout-demo halo-demo
+        scaleout-demo halo-demo serve-gnn-demo
 
 test:            ## full tier-1 suite (the ROADMAP bar)
 	$(PY) -m pytest -x -q
@@ -36,6 +36,10 @@ scaleout-demo:   ## 2-partition data-parallel smoke run + restore proof
 halo-demo:       ## scale-out with a bounded halo exchange (kept-info report)
 	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
 	    --partitions 2 --halo-budget 32 --steps 4
+
+serve-gnn-demo:  ## online GNN inference through the trainer's FeaturePlane
+	$(PY) -m repro.launch.serve --gnn --arch graphsage-products --smoke \
+	    --queries 16 --batch 4 --train-steps 4
 
 bench-quick:     ## reduced benchmark sweep
 	$(PY) -m benchmarks.run --quick

@@ -6,6 +6,7 @@
   §4  autotuning  — the online controller picks (γ, Θ, mode, workers)
   §5  scale-out   — 2 locality-aware partitions, synced gradients
   §6  halo        — bounded boundary-feature exchange across the cut
+  §7  serving     — online node predictions through the trainer's plane
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -104,3 +105,37 @@ res = trainer.run_epochs(epochs=1, max_steps_per_epoch=8)
 print(f"[halo]   acc={res.test_acc:.3f}  "
       f"halo-hit={trainer.halo_hit_rate:.3f} "
       f"(share of batch inputs served across the cut)")
+
+# §7 SERVING: answer online node queries with the SAME FeaturePlane the
+# trainer fetched through — the γ/Θ cache (and its hit accounting) carries
+# over, and a streamed feature update is visible to the very next query.
+# Same smoke run as
+#     PYTHONPATH=src python -m repro.launch.serve --gnn \
+#         --arch graphsage-products --smoke --queries 8 --batch 4
+import numpy as np
+
+from repro.graph.storage import FeatureStore
+from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
+
+trainer = A3GNNTrainer(graph, cfg, seed=0)
+pipe = trainer.make_pipeline()
+pipe.run(max_steps=8)                   # warms params AND the cache
+pipe.shutdown()
+hits_trained = trainer.cache.stats.hits
+engine = GNNInferenceEngine.from_trainer(trainer, batch=4, plane=pipe.plane)
+nodes = np.where(graph.test_mask)[0][:8]
+for rid, v in enumerate(nodes):
+    engine.submit(GNNRequest(rid=rid, node=int(v)))
+stats = engine.run_to_completion()
+print(f"[serve]  {stats['completed']} queries → "
+      f"{stats['queries_per_s']:.1f} q/s  p50={stats['p50_ms']:.0f}ms  "
+      f"cache-hit={stats['cache_hit_rate']:.2f} "
+      f"(train+serve hits {hits_trained} → {trainer.cache.stats.hits})")
+store = FeatureStore(graph)             # streaming feature drift
+engine.plane.subscribe_to(store)
+store.update_rows(nodes[:1], np.ones((1, graph.feat_dim), np.float32))
+engine.submit(GNNRequest(rid=99, node=int(nodes[0])))
+engine.run_to_completion()
+print(f"[stream] node {int(nodes[0])} updated (store v{store.version}) → "
+      f"re-query pred {engine.completed[0].pred} → "
+      f"{engine.completed[-1].pred} through the live plane")

@@ -1,11 +1,16 @@
 #!/usr/bin/env python
 """Docs anchor checker — offline-safe, stdlib-only (like lint_fallback.py).
 
-Every backticked ``path/to/module.py:symbol`` anchor in docs/*.md (and
-README.md) must resolve: the path exists relative to the repo root and
-the symbol occurs in that file as a word. Bare backticked ``*.py`` /
-``*.md`` / ``*.sh`` paths are checked for existence. This keeps the
-docs' module map from silently drifting as code moves.
+Every backticked ``path/to/module.py:symbol`` anchor in the docs tree
+(recursively auto-discovered — ``docs/**/*.md`` — plus README.md) must
+resolve: the path exists relative to the repo root and the symbol occurs
+in that file as a word. Bare backticked ``*.py`` / ``*.md`` / ``*.sh``
+paths are checked for existence. This keeps the docs' module map from
+silently drifting as code moves.
+
+The default run also requires every discovered doc to be LINKED from
+README.md's documentation index — a new doc used to be checkable but
+findable by nobody; now an unreferenced ``docs/*.md`` fails the lane.
 
     python scripts/check_docs.py [docs_dir ...]
 """
@@ -52,7 +57,9 @@ def check_doc(doc: Path):
 
 def main(argv):
     dirs = [Path(a) for a in argv] or [ROOT / "docs"]
-    docs = [p for d in dirs for p in sorted(d.glob("*.md"))]
+    # recursive auto-discovery: a doc added anywhere under docs/ (or a
+    # passed dir) is checked without touching this script or the CI lane
+    docs = [p for d in dirs for p in sorted(d.rglob("*.md"))]
     readme = ROOT / "README.md"
     if readme.is_file() and readme not in docs:
         docs.append(readme)
@@ -65,6 +72,17 @@ def main(argv):
         doc_problems, doc_anchors = check_doc(doc)
         problems.extend(doc_problems)
         anchors += doc_anchors
+    # README index guard (default run only): every discovered doc must be
+    # reachable from README.md, so a new doc cannot land unreferenced
+    if not argv and readme.is_file():
+        readme_text = readme.read_text()
+        for doc in docs:
+            if doc == readme:
+                continue
+            rel = doc.relative_to(ROOT).as_posix()
+            if rel not in readme_text:
+                problems.append(f"{doc.name}: `{rel}` not linked from "
+                                f"README.md's documentation index")
     for p in problems:
         print(f"check_docs: {p}", file=sys.stderr)
     print(f"check_docs: {len(docs)} docs, {anchors} code anchors, "

@@ -8,17 +8,22 @@
 #          falls back to scripts/lint_fallback.py (same rule subset) on
 #          hosts without ruff, so the lane is meaningful offline.
 #   docs:  scripts/check_docs.py — every `path.py:symbol` code anchor in
-#          docs/*.md and README.md must resolve (offline-safe, stdlib).
-#          Runs in lane 1 (the fast job) alongside the fast tests.
+#          the auto-discovered docs tree (docs/**/*.md + README.md) must
+#          resolve, and every doc must be linked from README.md
+#          (offline-safe, stdlib).  Runs in lane 1 (the fast job)
+#          alongside the fast tests.
 #   kernels: the Pallas kernel oracles + the FeaturePlane host/device
-#          parity tests — the focused signal for accelerator-path changes
+#          parity tests + the streaming-update mirror re-sync tests —
+#          the focused signal for accelerator-path changes
 #          (also part of the fast job, as its own JUnit artifact).
 #   fast:  everything except tests marked `slow` — the sub-minute signal
-#          for every push.  The CI fast job does NOT install `hypothesis`,
-#          keeping the tests/_hypothesis_compat.py shim path covered.
-#          The kernel/plane files are skipped here (the kernels lane owns
-#          them) so the fast job never runs the interpret-mode Pallas
-#          sweeps twice; `full` still runs everything in one invocation.
+#          for every push; this is where the serving-engine tests
+#          (tests/test_gnn_serve.py) run.  The CI fast job does NOT
+#          install `hypothesis`, keeping the tests/_hypothesis_compat.py
+#          shim path covered.  The kernel/plane/streaming files are
+#          skipped here (the kernels lane owns them) so the fast job
+#          never runs the interpret-mode Pallas sweeps twice; `full`
+#          still runs everything in one invocation.
 #   full:  the tier-1 command from ROADMAP.md, including the slow
 #          pipeline/system tests.  This is the merge bar.
 #
@@ -64,11 +69,13 @@ case "$LANE" in
     kernels)
         run_lane kernels python -m pytest -x -q \
             tests/test_kernels.py tests/test_feature_plane.py \
+            tests/test_streaming.py \
             --junitxml "$ART/junit_kernels.xml" ;;
     fast)
         run_lane fast python -m pytest -x -q -m "not slow" \
             --ignore tests/test_kernels.py \
             --ignore tests/test_feature_plane.py \
+            --ignore tests/test_streaming.py \
             --junitxml "$ART/junit_fast.xml" ;;
     full)
         run_lane full python -m pytest -x -q \
@@ -78,10 +85,12 @@ case "$LANE" in
         run_lane docs python scripts/check_docs.py
         run_lane kernels python -m pytest -x -q \
             tests/test_kernels.py tests/test_feature_plane.py \
+            tests/test_streaming.py \
             --junitxml "$ART/junit_kernels.xml"
         run_lane fast python -m pytest -x -q -m "not slow" \
             --ignore tests/test_kernels.py \
             --ignore tests/test_feature_plane.py \
+            --ignore tests/test_streaming.py \
             --junitxml "$ART/junit_fast.xml"
         run_lane full python -m pytest -x -q \
             --junitxml "$ART/junit_full.xml" ;;

@@ -92,6 +92,10 @@ class GNNConfig:
     # bounded halo exchange: top-k boundary features each partition keeps
     # (0 → drop cut edges entirely, the paper's no-remote-access setting)
     halo_budget: int = 0
+    # streaming graphs: re-run the bounded halo exchange every N global
+    # steps WHEN stale (a FeatureStore update touched a halo-resident row);
+    # 0 → no periodic refresh (explicit refresh_halo_features() only)
+    halo_refresh_interval: int = 0
     # training
     lr: float = 3e-3
     dropout: float = 0.0

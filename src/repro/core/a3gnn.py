@@ -27,7 +27,7 @@ from repro.core.perf_model import MemoryTerms, memory_seq, memory_mode1, memory_
 from repro.core.sampling import NeighborSampler, seed_loader
 from repro.graph.batch import generate_batch, batch_device_arrays
 from repro.graph.partition import partition, overlap_ratio
-from repro.graph.storage import Graph
+from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.models.gnn import decls_gnn, make_train_step, make_eval_fn
 from repro.models.params import init_params, param_bytes
 from repro.train.checkpoint import TrainerCheckpointMixin
@@ -68,7 +68,7 @@ def apply_baseline(cfg: GNNConfig, baseline: Optional[str]) -> GNNConfig:
     raise ValueError(baseline)
 
 
-class A3GNNTrainer(TrainerCheckpointMixin):
+class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
     def __init__(self, graph: Graph, cfg: GNNConfig, seed: int = 0):
         self.full_graph = graph
         self.cfg = cfg
@@ -89,6 +89,25 @@ class A3GNNTrainer(TrainerCheckpointMixin):
         self.opt_state = self.opt.init(self.params)
         self._step = make_train_step(cfg, self.opt)
         self._eval = make_eval_fn(cfg)
+
+    # ------------------------------------------------------------------
+    # streaming feature updates — attach/detach from FeatureStreamConsumer
+    # (graph/storage.py); single-partition routing: refresh resident rows
+    # ------------------------------------------------------------------
+    def _check_feature_store_target(self):
+        if self.graph is not self.full_graph:
+            raise ValueError("attach_feature_store needs the undivided "
+                             "graph (partitions=1); use "
+                             "MultiPartitionTrainer for partition fleets")
+
+    def _on_feature_update(self, ids, rows):
+        # the store already wrote the host rows; pull resident copies
+        # (device mirrors re-sync off FeatureCache.version), so the
+        # trainer — and every serving engine sharing its plane — observes
+        # the drift
+        del rows
+        if self.cache is not None:
+            self.cache.refresh_rows(ids)
 
     # ------------------------------------------------------------------
     def _train_fn(self, mb):

@@ -428,6 +428,13 @@ class AutotuneController:
                               partition_method=method)
         new_tr.restore(self._restart_mgr, step=self.restarts,
                        expect_partitions=old_p)
+        # an attached FeatureStore follows the live trainer: the old
+        # subscription is detached (updates must not route into the dead
+        # topology) and the rebuilt trainer re-attaches to the same store
+        store = getattr(self.tr, "feature_store", None)
+        if store is not None:
+            self.tr.detach_feature_store()
+            new_tr.attach_feature_store(store)
         self.tr, self.pipe = new_tr, new_tr.make_pipeline()
 
     def _apply_config(self, cfg: Dict):

@@ -97,6 +97,33 @@ class FeatureCache:
             self.storage[:n] = self.g.features[keep]
             self._fifo_head = n % self.capacity
 
+    # -- streaming updates ---------------------------------------------------
+    def patch_resident(self, ids: np.ndarray, rows: np.ndarray) -> int:
+        """Overwrite the cache-resident copies among ``ids`` with the
+        matching ``rows``, bumping ``version`` when anything changed so
+        device mirrors (core/feature_plane.py) re-sync.  THE one place
+        the resident-write → version invariant lives: both the push path
+        (``FeaturePlane.fill_rows``) and the pull path (``refresh_rows``)
+        delegate here.  Returns the number of resident rows patched."""
+        if not self.capacity:
+            return 0
+        slots = self.device_map[ids]
+        hit = slots >= 0
+        if hit.any():
+            self.storage[slots[hit]] = rows[hit]
+            self.version += 1           # device mirrors must re-sync
+        return int(hit.sum())
+
+    def refresh_rows(self, ids: np.ndarray) -> int:
+        """Re-copy ``ids``'s rows from the host store into their resident
+        cache slots after a streaming update (``graph/storage.py``
+        ``FeatureStore.update_rows``) — the pull side for consumers that
+        only learn WHICH rows moved."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if not self.capacity:
+            return 0
+        return self.patch_resident(ids, self.g.features[ids])
+
     # -- lookups ------------------------------------------------------------
     def is_cached(self, ids: np.ndarray) -> np.ndarray:
         return self.device_map[ids] >= 0

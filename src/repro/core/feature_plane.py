@@ -1,5 +1,8 @@
 """FeaturePlane — the pluggable feature-fetch seam of the batch-generation
 hot path (paper §III-A/B; the "gather" stage of sample → gather → transfer).
+Training (core/pipeline.py) and online inference serving
+(serve/gnn_engine.py) fetch through the SAME plane object, so the γ/Θ
+cache and its hit/miss accounting carry across the train → serve boundary.
 
 Every consumer of node features goes through ONE interface:
 
@@ -67,6 +70,7 @@ class FeaturePlane:
     def __init__(self, graph: Graph, cache: Optional[FeatureCache] = None):
         self.graph = graph
         self.cache = cache
+        self.store = None               # attached FeatureStore (subscribe_to)
 
     # -- reads ---------------------------------------------------------------
     def fetch(self, ids: np.ndarray) -> np.ndarray:
@@ -76,6 +80,39 @@ class FeaturePlane:
         return self.graph.features[np.asarray(ids, dtype=np.int64)]
 
     # -- writes (halo fills / streaming updates) -----------------------------
+    def subscribe_to(self, store) -> "FeaturePlane":
+        """Wire this plane into a ``graph/storage.py`` ``FeatureStore``:
+        every streamed ``update_rows`` patches cache-resident copies and
+        invalidates device mirrors (the store itself already wrote the
+        host rows), so the serving engine (serve/gnn_engine.py) and a
+        live trainer observe the same drift through the same seam.  Any
+        previous subscription is detached first (a plane tracks at most
+        one store); the store is recorded so a plane swap
+        (``Pipeline.reconfigure``) can migrate the subscription to the
+        successor plane."""
+        self.detach_store()
+        self.store = store
+        store.subscribe(self._on_store_update)
+        return self
+
+    def detach_store(self):
+        """Unsubscribe from the attached store — a REPLACED plane must
+        detach or streamed updates keep routing into the dead object
+        while its successor's cache silently drifts
+        (``Pipeline.reconfigure`` migrates the subscription)."""
+        if self.store is not None:
+            self.store.unsubscribe(self._on_store_update)
+            self.store = None
+
+    def _on_store_update(self, ids: np.ndarray, rows: np.ndarray):
+        """Store subscriber: the store wrote the host rows already, so
+        only resident copies need patching (version bump → mirror
+        re-sync) — no redundant host-store rewrite per subscribed plane."""
+        c = self.cache
+        if c is not None:
+            c.patch_resident(np.asarray(ids, dtype=np.int64),
+                             np.asarray(rows, dtype=np.float32))
+
     def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
         """Overwrite feature rows ``ids`` in the host store, propagating to
         cache-resident copies (and, on the device plane, invalidating the
@@ -83,12 +120,10 @@ class FeaturePlane:
         ids = np.asarray(ids, dtype=np.int64)
         self.graph.features[ids] = rows
         c = self.cache
-        if c is not None and c.capacity:
-            slots = c.device_map[ids]
-            hit = slots >= 0
-            if hit.any():
-                c.storage[slots[hit]] = rows[hit]
-                c.version += 1          # device mirrors must re-sync
+        if c is not None:
+            # resident-copy patch + version bump (mirror invalidation)
+            # live in ONE place: FeatureCache.patch_resident
+            c.patch_resident(ids, np.asarray(rows, dtype=np.float32))
 
     # -- reconfiguration -----------------------------------------------------
     def resize(self, volume_mb: float, keep_residents: bool = True):
@@ -202,6 +237,10 @@ class DeviceFeaturePlane(FeaturePlane):
     def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
         with self._lock:
             super().fill_rows(ids, rows)
+
+    def _on_store_update(self, ids: np.ndarray, rows: np.ndarray):
+        with self._lock:
+            super()._on_store_update(ids, rows)
 
     def resize(self, volume_mb: float, keep_residents: bool = True):
         with self._lock:

@@ -23,7 +23,12 @@ the existing substrate:
     (checkpointed next to the cache hit accounting);
   * checkpoint/restore rides ``train/checkpoint.py`` (partition topology +
     per-partition cache hit accounting in the manifest) and restart/straggler
-    handling rides ``train/fault_tolerance.py`` (``fit_supervised``).
+    handling rides ``train/fault_tolerance.py`` (``fit_supervised``);
+  * streaming graphs: ``attach_feature_store`` subscribes the fleet to a
+    ``graph/storage.py`` ``FeatureStore`` — owned-row updates land in the
+    owning partition's feature plane immediately, stale halo copies are
+    recovered by a bounded periodic halo re-fill
+    (``cfg.halo_refresh_interval`` / ``refresh_halo_features``).
 
 Interface-compatible with ``A3GNNTrainer`` where the autotune controller
 needs it, so the episode space can tune ``partitions`` through the
@@ -48,7 +53,7 @@ from repro.core.sampling import NeighborSampler, seed_loader
 from repro.distributed.collectives import grad_allreduce, halo_all_to_all
 from repro.graph.batch import generate_batch, batch_device_arrays
 from repro.graph.partition import PartitionPlan, plan_partitions
-from repro.graph.storage import Graph
+from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.launch.mesh import make_partition_mesh
 from repro.models.gnn import (decls_gnn, make_apply_fn, make_eval_fn,
                               make_grad_fn)
@@ -199,7 +204,7 @@ class MultiPipeline:
             agg.queue_peak = max(agg.queue_peak, st.queue_peak)
 
 
-class MultiPartitionTrainer(TrainerCheckpointMixin):
+class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
     """Data-parallel A³GNN over ``cfg.partitions`` graph partitions.
 
     Shared (params, opt_state); per-partition (subgraph, cache, sampler
@@ -233,6 +238,10 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.halo_exchange_bytes = self._fill_halo_features()
         self.eta = float(np.mean(self.plan.etas(graph)))
         self.global_steps = 0
+        # streaming-update state (attach_feature_store)
+        self.halo_refreshes = 0
+        self._halo_dirty = False
+        self._owned_local_map = None     # lazy (N,) owned-local index
 
     # ------------------------------------------------------------------
     def _fill_halo_features(self) -> int:
@@ -254,6 +263,71 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
                 local = np.arange(len(ns), len(ns) + len(rows))
                 slot.pipe.plane.fill_rows(local, rows)
         return int(volume)
+
+    # ------------------------------------------------------------------
+    # streaming feature updates — attach/detach from FeatureStreamConsumer
+    # (graph/storage.py); fleet routing: owner's plane now, halo later
+    # ------------------------------------------------------------------
+    def _owned_local(self) -> np.ndarray:
+        """(N,) local id of each node WITHIN its owning partition — one
+        shared index next to ``plan.owner`` (not a per-partition N-map),
+        so routing streamed updates costs O(N) memory once, not P×N."""
+        if self._owned_local_map is None:
+            m = np.zeros(self.full_graph.num_nodes, dtype=np.int32)
+            for ns in self.plan.node_sets:
+                m[ns] = np.arange(len(ns), dtype=np.int32)
+            self._owned_local_map = m
+        return self._owned_local_map
+
+    def _local_id(self, p: int, node: int) -> int:
+        """Local id of global ``node`` in partition p's subgraph (owned
+        prefix or halo tail), -1 if absent.  Debug/test helper — the
+        update path routes vectorized through ``plan.owner``."""
+        if int(self.plan.owner[node]) == p:
+            return int(self._owned_local()[node])
+        if self.plan.halo_sets:
+            pos = np.where(self.plan.halo_sets[p] == node)[0]
+            if len(pos):
+                return len(self.plan.node_sets[p]) + int(pos[0])
+        return -1
+
+    def _on_feature_update(self, ids: np.ndarray, rows: np.ndarray):
+        """FeatureStore subscriber: updates are routed immediately to the
+        OWNING partition's feature plane (cache-resident copies update,
+        device mirrors invalidate); halo copies of updated rows on OTHER
+        partitions only go stale — re-filling them is the bounded periodic
+        exchange's job (``cfg.halo_refresh_interval`` /
+        ``refresh_halo_features``): streaming updates must not turn every
+        row write into cross-partition traffic."""
+        ids = np.asarray(ids, dtype=np.int64)
+        owners = self.plan.owner[ids]
+        local = self._owned_local()[ids]
+        for slot in self.slots:
+            mine = owners == slot.index
+            if mine.any():
+                slot.pipe.plane.fill_rows(local[mine], rows[mine])
+        if not self._halo_dirty:
+            for hs in self.plan.halo_sets:
+                if len(hs) and np.isin(ids, hs).any():
+                    self._halo_dirty = True
+                    break
+
+    def refresh_halo_features(self) -> int:
+        """Re-run the bounded halo exchange over the CURRENT budget: the
+        same affinity-ranked rows move again through the mesh, through
+        each partition's feature plane (mirror invalidation included), so
+        halo copies catch up with streamed feature drift.  Returns the
+        exchanged volume in bytes (0 with no halo)."""
+        volume = self._fill_halo_features()
+        self.halo_refreshes += 1
+        self._halo_dirty = False
+        return volume
+
+    def _maybe_refresh_halo(self):
+        every = getattr(self.cfg, "halo_refresh_interval", 0)
+        if (every > 0 and self._halo_dirty
+                and self.global_steps % every == 0):
+            self.refresh_halo_features()
 
     def _make_slot(self, p: int, sub: Graph) -> PartitionSlot:
         cfg = self.cfg
@@ -325,6 +399,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.params, self.opt_state = self._apply(self.params, self.opt_state,
                                                   mean)
         self.global_steps += 1
+        self._maybe_refresh_halo()
 
     def global_step(self, fail_worker: Optional[int] = None):
         """One gradient-synchronized step: each partition samples + batches
@@ -349,6 +424,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.params, self.opt_state = self._apply(self.params, self.opt_state,
                                                   mean)
         self.global_steps += 1
+        self._maybe_refresh_halo()       # same contract as the synced step
         return float(np.mean(losses)), float(np.mean(accs))
 
     # ------------------------------------------------------------------
@@ -498,6 +574,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin):
         self.slots = [self._make_slot(p, sub) for p, sub in
                       enumerate(self.plan.subgraphs)]
         self.halo_exchange_bytes = self._fill_halo_features()
+        self._halo_dirty = False     # the re-budget refilled every halo row
         for new, prev in zip(self.slots, old):
             if new.cache is not None and prev.cache is not None:
                 new.cache.stats = prev.cache.stats   # accounting survives

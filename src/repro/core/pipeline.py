@@ -314,9 +314,17 @@ class Pipeline:
             # cache mutation is covered by FeatureCache.version
             if (new_cache is not self.plane.cache
                     or self.sampling_device != self.plane.backend):
+                old_plane = self.plane
                 self.plane = make_feature_plane(self.graph, new_cache,
                                                 self.sampling_device)
                 self.sampling_device = self.plane.backend
+                # a FeatureStore subscription follows the LIVE plane: the
+                # dead plane detaches (no stale routing, nothing pinned)
+                # and the successor observes all further streamed updates
+                if old_plane.store is not None:
+                    store = old_plane.store
+                    old_plane.detach_store()
+                    self.plane.subscribe_to(store)
         if weight_fn is not _UNSET:
             self.weight_fn = weight_fn
         if batch_size is not None:

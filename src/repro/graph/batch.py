@@ -69,6 +69,17 @@ def batch_device_arrays(mb: MiniBatch):
     }
 
 
+def inference_arrays(mb: MiniBatch):
+    """Forward-only view of ``batch_device_arrays`` for the serving path
+    (serve/gnn_engine.py): same chained-padding invariant, no labels —
+    the engine consumes per-seed logits; the exact seed level bounds the
+    jitted forward to at most one signature per active-slot count."""
+    arrays = batch_device_arrays(mb)
+    return {"features": arrays["features"],
+            "neigh_idxs": arrays["neigh_idxs"],
+            "sizes": arrays["sizes"]}
+
+
 def batch_bytes(mb: MiniBatch) -> int:
     """B term of Eq. (3): bytes of the generated mini-batch."""
     total = mb.features.nbytes if mb.features is not None else 0

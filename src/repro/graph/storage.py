@@ -3,6 +3,9 @@
 The host-resident graph mirrors the paper's CPU-side data: adjacency in CSR,
 features in a dense row store, labels + split masks for node classification.
 Degree ("hotness") statistics drive the static cache policy (PaGraph-style).
+``FeatureStore`` is the streaming write path over that row store: versioned
+row updates fanned out to every derived copy (caches, device mirrors, halo
+rows) so trainers and the serving engine observe feature drift coherently.
 """
 from __future__ import annotations
 
@@ -110,6 +113,105 @@ class Graph:
     def memory_bytes(self) -> int:
         return (self.indptr.nbytes + self.indices.nbytes
                 + self.features.nbytes + self.labels.nbytes)
+
+
+class FeatureStore:
+    """Streaming mutation path for the host feature row store.
+
+    ``Graph.features`` is the single source of truth for node features;
+    every derived copy — cache-resident rows (``core/cache.py``), device
+    mirrors (``core/feature_plane.py``), halo rows on other partitions
+    (``core/multipart.py``) — must observe a row update or training and
+    serving silently drift apart.  ``FeatureStore`` wraps one graph's
+    store with a monotonic ``version`` and a subscriber fan-out so a
+    single ``update_rows`` call reaches every consumer:
+
+      * a ``FeaturePlane`` subscribes its ``fill_rows`` (via
+        ``FeaturePlane.subscribe_to``) — cache-resident copies update and
+        the device mirror invalidates through ``FeatureCache.version``;
+      * ``MultiPartitionTrainer.attach_feature_store`` subscribes a
+        global→local remap that routes owned rows into the owning
+        partition's plane and marks stale halo copies for the bounded
+        periodic re-fill.
+
+    Subscribers receive ``(ids, rows)`` with GLOBAL node ids; the store
+    writes ``graph.features`` first, so a subscriber may re-read the
+    store instead of using ``rows``.
+    """
+
+    def __init__(self, graph: Graph):
+        self.graph = graph
+        self.version = 0                 # bumps once per update_rows call
+        self.rows_updated = 0            # cumulative streamed row count
+        self._subscribers = []
+
+    def subscribe(self, fn):
+        """Register ``fn(ids, rows)`` to run after every ``update_rows``."""
+        self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn):
+        """Drop a subscriber (no-op if absent) — consumers being replaced
+        (a trainer rebuilt by the autotune ``partitions`` restart, a plane
+        swapped by ``Pipeline.reconfigure``) MUST detach, or updates keep
+        routing into the dead object while its replacement drifts."""
+        if fn in self._subscribers:
+            self._subscribers.remove(fn)
+
+    def update_rows(self, ids: np.ndarray, rows: np.ndarray) -> int:
+        """Overwrite feature rows ``ids`` (global) with ``rows`` and fan
+        the update out to every subscriber.  Returns the new version."""
+        ids = np.asarray(ids, dtype=np.int64)
+        rows = np.asarray(rows, dtype=np.float32)
+        if rows.shape != (len(ids), self.graph.feat_dim):
+            raise ValueError(f"update_rows: rows shape {rows.shape} != "
+                             f"({len(ids)}, {self.graph.feat_dim})")
+        self.graph.features[ids] = rows
+        self.version += 1
+        self.rows_updated += len(ids)
+        for fn in list(self._subscribers):
+            fn(ids, rows)
+        return self.version
+
+
+class FeatureStreamConsumer:
+    """Attach/detach scaffolding for trainers subscribing a
+    ``_on_feature_update(ids, rows)`` callback to a ``FeatureStore``.
+
+    Both trainer kinds (core/a3gnn.py, core/multipart.py) mix this in;
+    the autotune ``partitions`` restart path migrates the subscription
+    between them and relies on the two staying behaviorally identical,
+    so the skeleton lives ONCE, here.  Subclasses implement
+    ``_on_feature_update`` and may override ``_check_feature_store_target``
+    to reject unroutable topologies."""
+
+    feature_store: "FeatureStore" = None
+
+    def _check_feature_store_target(self):
+        pass
+
+    def attach_feature_store(self, store: "FeatureStore" = None
+                             ) -> "FeatureStore":
+        """Subscribe this consumer to ``store`` (default: a fresh store
+        over the trainer's full graph).  Any previous subscription is
+        detached first — a consumer tracks at most one store, so a
+        re-attach can never leak an unreachable subscription on the old
+        one.  Returns the store."""
+        self._check_feature_store_target()
+        self.detach_feature_store()
+        if store is None:
+            store = FeatureStore(self.full_graph)
+        store.subscribe(self._on_feature_update)
+        self.feature_store = store
+        return store
+
+    def detach_feature_store(self):
+        """Unsubscribe (a replaced trainer — e.g. the autotune
+        ``partitions`` restart — must detach, or updates keep routing
+        into the dead object); the store itself lives on."""
+        if self.feature_store is not None:
+            self.feature_store.unsubscribe(self._on_feature_update)
+            self.feature_store = None
 
 
 def from_edges(num_nodes: int, src: np.ndarray, dst: np.ndarray,

@@ -1,7 +1,16 @@
-"""Serving entry point: batched decode with continuous batching.
+"""Serving entry point — two engines behind one CLI.
+
+LM token decode (continuous batching over prompts):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --requests 16 --batch 4 --max-new 12
+
+Online GNN node inference over the training-side FeaturePlane (trains
+briefly to warm params + cache, then serves node queries and applies a
+streaming feature update mid-serving):
+
+  PYTHONPATH=src python -m repro.launch.serve --gnn \
+      --arch graphsage-products --smoke --queries 16 --batch 4
 """
 from __future__ import annotations
 
@@ -10,19 +19,7 @@ import argparse
 import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def run_lm_serve(args):
     from repro.configs import get_config
     from repro.serve.engine import Engine, Request
 
@@ -36,11 +33,116 @@ def main():
         eng.submit(Request(rid=rid, prompt=prompt,
                            max_new_tokens=args.max_new))
     stats = eng.run_to_completion()
-    lat = [r.t_first - r.t_submit for r in eng.completed]
     print(f"[result] {stats['completed']} requests, {stats['tokens']} tokens "
           f"in {stats['seconds']:.2f}s → {stats['tokens_per_s']:.1f} tok/s; "
-          f"mean TTFT {np.mean(lat)*1e3:.1f} ms")
+          f"TTFT p50 {stats['ttft_p50_ms']:.1f} ms "
+          f"p99 {stats['ttft_p99_ms']:.1f} ms")
     return 0
+
+
+def run_gnn_serve(args):
+    """Online GNN inference: brief training warms the params AND the γ/Θ
+    feature cache, then the SAME FeaturePlane instance serves node
+    queries — shared hit/miss accounting proves the reuse — and a
+    mid-serving ``FeatureStore.update_rows`` is reflected in the very
+    next prediction."""
+    from repro.configs import get_config
+    from repro.core.a3gnn import A3GNNTrainer
+    from repro.graph.storage import FeatureStore
+    from repro.graph.synthetic import dataset_like
+    from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if getattr(cfg, "family", None) != "gnn":
+        raise SystemExit(f"--gnn serving needs a GNN arch "
+                         f"(e.g. graphsage-products); {args.arch!r} is a "
+                         f"{getattr(cfg, 'family', 'non-GNN')} config — "
+                         f"drop --gnn for token-decode serving")
+    if args.sampling_device:
+        cfg = cfg.replace(sampling_device=args.sampling_device)
+    graph = dataset_like(cfg, seed=args.seed)
+    print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
+          f"{graph.num_edges} edges, {graph.num_classes} classes")
+
+    tr = A3GNNTrainer(graph, cfg, seed=args.seed)
+    pipe = tr.make_pipeline()
+    try:
+        pipe.run(max_steps=args.train_steps)
+    finally:
+        pipe.shutdown()               # workers down; the plane stays live
+    hits_trained = tr.cache.stats.hits if tr.cache else 0
+    print(f"[train] {args.train_steps} steps warmed the cache: "
+          f"{hits_trained} hits, "
+          f"hit_rate={tr.cache_hit_rate:.3f}")
+
+    eng = GNNInferenceEngine.from_trainer(tr, batch=args.batch,
+                                          plane=pipe.plane, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    test_ids = np.where(graph.test_mask)[0]
+    nodes = rng.choice(test_ids, size=args.queries, replace=True)
+    for rid, v in enumerate(nodes):
+        eng.submit(GNNRequest(rid=rid, node=int(v)))
+    stats = eng.run_to_completion()
+    print(f"[serve] {stats['completed']} queries in {stats['seconds']:.2f}s "
+          f"→ {stats['queries_per_s']:.1f} q/s over "
+          f"{stats['engine_steps']} engine steps "
+          f"(batch={args.batch}, backend={eng.plane.backend}); "
+          f"latency p50 {stats['p50_ms']:.1f} ms p99 {stats['p99_ms']:.1f} ms")
+    if tr.cache is not None:
+        print(f"[plane] shared with training: hits {hits_trained} → "
+              f"{tr.cache.stats.hits} (serving added "
+              f"{tr.cache.stats.hits - hits_trained}), "
+              f"hit_rate={tr.cache.stats.hit_rate:.3f}")
+
+    # streaming update mid-serving: the store fans the row out through the
+    # plane (cache-resident copy + device-mirror invalidation), so the
+    # re-query sees the drifted feature immediately
+    store = FeatureStore(graph)
+    eng.plane.subscribe_to(store)
+    node = int(nodes[0])
+    before = eng.completed[0].pred
+    store.update_rows(np.array([node]),
+                      np.full((1, graph.feat_dim), 1.0, np.float32))
+    eng.submit(GNNRequest(rid=args.queries, node=node))
+    eng.run_to_completion()
+    after = eng.completed[-1].pred
+    print(f"[stream] update_rows(node {node}) → store v{store.version}; "
+          f"re-query pred {before} → {after} "
+          f"(drift observed through the live plane)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # LM decode knobs
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # GNN serving knobs
+    ap.add_argument("--gnn", action="store_true",
+                    help="serve online GNN node predictions through the "
+                         "training-side FeaturePlane (serve/gnn_engine.py); "
+                         "implied when --arch names a GNN config "
+                         "(graphsage-*)")
+    ap.add_argument("--queries", type=int, default=16,
+                    help="node-prediction requests to serve (--gnn)")
+    ap.add_argument("--train-steps", type=int, default=4,
+                    help="brief training steps to warm params + cache "
+                         "before serving (--gnn)")
+    ap.add_argument("--sampling-device", default=None,
+                    choices=[None, "cpu", "device", "auto"],
+                    help="feature-plane backend for the serving gather")
+    args = ap.parse_args()
+
+    if args.gnn or args.arch.startswith("graphsage"):
+        return run_gnn_serve(args)
+    return run_lm_serve(args)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,8 @@ def run_gnn(args):
         cfg = cfg.replace(partitions=args.partitions)
     if args.halo_budget is not None:
         cfg = cfg.replace(halo_budget=args.halo_budget)
+    if args.halo_refresh_interval is not None:
+        cfg = cfg.replace(halo_refresh_interval=args.halo_refresh_interval)
     if args.sampling_device is not None:
         cfg = cfg.replace(sampling_device=args.sampling_device)
     cfg = apply_baseline(cfg, args.baseline)
@@ -200,6 +202,10 @@ def main():
                     help="per-partition cap on boundary feature rows "
                          "exchanged through the mesh (0 = drop cut edges, "
                          "the paper's no-remote-access setting)")
+    ap.add_argument("--halo-refresh-interval", type=int, default=None,
+                    help="re-run the bounded halo exchange every N global "
+                         "steps when streamed feature updates left halo "
+                         "copies stale (0 = explicit refresh only)")
     ap.add_argument("--sampling-device", default=None,
                     choices=[None, "cpu", "device", "auto"],
                     help="feature-plane backend for batch generation: "

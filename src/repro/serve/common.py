@@ -1,0 +1,81 @@
+"""Shared serving machinery — the seam between the two engines.
+
+``serve/engine.py`` (token decode) and ``serve/gnn_engine.py`` (online GNN
+node inference) run the same continuous-batching skeleton: a FIFO of
+pending requests, a fixed pool of batch slots, admit → execute → retire.
+The admission logic and the latency accounting live HERE so the engines
+cannot drift apart — an admission-policy change (priorities, backpressure,
+fairness) lands in one place and both engines inherit it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def admit_pending(pending: List, running: Dict,
+                  try_allocate: Callable[[object], Optional[int]],
+                  on_admit: Optional[Callable[[object, int], None]] = None
+                  ) -> int:
+    """Admit queued requests into free slots, in FIFO order.
+
+    ``try_allocate(req)`` returns a slot index or ``None`` (no capacity —
+    or a request the pool cannot ever hold, which then blocks the head of
+    the line exactly like the pre-seam engines did).  ``on_admit(req,
+    slot)`` runs per admission (the LM engine prefills the KV slot there);
+    afterwards ``running[slot] = req``.  Returns the number admitted.
+    """
+    admitted = 0
+    while pending:
+        req = pending[0]
+        slot = try_allocate(req)
+        if slot is None:
+            break
+        pending.pop(0)
+        if on_admit is not None:
+            on_admit(req, slot)
+        running[slot] = req
+        admitted += 1
+    return admitted
+
+
+def trim_completed(completed: List, keep: int):
+    """Bound the retained result history in place (oldest dropped) —
+    an online engine must not grow per-request state forever."""
+    if len(completed) > keep:
+        del completed[:len(completed) - keep]
+
+
+def drain(engine, max_iters: int) -> Tuple[int, float]:
+    """Step ``engine`` until its queues are empty (or ``max_iters``);
+    returns ``(emitted, seconds)``.  The run_to_completion drive loop
+    both engines share — like ``admit_pending``, it lives once so the
+    drain policy cannot drift between them."""
+    t0 = time.perf_counter()
+    emitted = 0
+    iters = 0
+    while (engine.pending or engine.running) and iters < max_iters:
+        emitted += engine.step()
+        iters += 1
+    return emitted, time.perf_counter() - t0
+
+
+def latency_stats(completed: List) -> Dict[str, float]:
+    """p50/p99 latency over completed requests, in milliseconds.
+
+    Requests carry ``t_submit`` / ``t_first`` / ``t_done`` perf-counter
+    stamps (both engines' request dataclasses); ``total`` is
+    submit → done (queue wait included — the number a caller of the
+    serving endpoint experiences), ``ttft`` is submit → first output.
+    """
+    if not completed:
+        return {"p50_ms": 0.0, "p99_ms": 0.0,
+                "ttft_p50_ms": 0.0, "ttft_p99_ms": 0.0}
+    total = np.array([r.t_done - r.t_submit for r in completed])
+    ttft = np.array([r.t_first - r.t_submit for r in completed])
+    return {"p50_ms": float(np.percentile(total, 50) * 1e3),
+            "p99_ms": float(np.percentile(total, 99) * 1e3),
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3)}

@@ -1,11 +1,19 @@
-"""Batched decode engine (continuous batching).
+"""Batched decode engine (continuous batching) for the TOKEN-DECODE
+families.
 
-Drives any model family from models/api.py: per-request prefill into a free
+Drives the autoregressive model families from models/api.py (transformer /
+ssm / hybrid / moe / encdec decoders): per-request prefill into a free
 cache slot, then one jitted decode step per iteration for the whole batch;
 finished requests free their slot and waiting prompts join.  Greedy or
 temperature sampling.  Works on CPU for the serving example/tests and lowers
 unchanged on the production mesh (the dry-run's decode cells are exactly
 ``engine.step``'s computation).
+
+GNN node inference is NOT served here — that is serve/gnn_engine.py, which
+batches single-shot node queries over the training-side FeaturePlane.  The
+two engines share the slot-admission and latency-accounting seam in
+serve/common.py (``admit_pending`` / ``latency_stats``), so continuous-
+batching policy changes land once and apply to both.
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ import numpy as np
 
 from repro.models.api import build
 from repro.models.params import init_params
+from repro.serve.common import (admit_pending, drain, latency_stats,
+                                trim_completed)
 from repro.serve.kv_cache import KVCacheManager
 
 
@@ -36,7 +46,8 @@ class Request:
 
 class Engine:
     def __init__(self, cfg, params=None, batch: int = 8, max_len: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 keep_completed: int = 4096):
         self.cfg = cfg
         self.model = build(cfg)
         self.batch = batch
@@ -52,7 +63,11 @@ class Engine:
         self._rng = np.random.default_rng(seed)
         self.pending: List[Request] = []
         self.running: Dict[int, Request] = {}   # slot -> request
+        # retained history is BOUNDED, same policy as the GNN engine (an
+        # online engine must not grow per-request state forever)
+        self.keep_completed = max(int(keep_completed), 1)
         self.completed: List[Request] = []
+        self.total_completed = 0
         self._tokens = np.zeros(batch, np.int32)
 
     # ------------------------------------------------------------------
@@ -88,15 +103,10 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: admit, decode, sample, retire."""
-        # admit pending into free slots
-        while self.pending and self.kv.free_slots():
-            req = self.pending.pop(0)
-            slot = self.kv.allocate(req.rid, len(req.prompt))
-            if slot is None:
-                self.pending.insert(0, req)
-                break
-            self._prefill_into_slot(req, slot)
-            self.running[slot] = req
+        # admit pending into free slots (the serve/common.py seam)
+        admit_pending(self.pending, self.running,
+                      lambda r: self.kv.allocate(r.rid, len(r.prompt)),
+                      self._prefill_into_slot)
         if not self.running:
             return 0
 
@@ -128,17 +138,21 @@ class Engine:
                 self.kv.release(slot)
                 del self.running[slot]
                 self.completed.append(req)
+                self.total_completed += 1
+        trim_completed(self.completed, self.keep_completed)
         return n_emitted
 
     # ------------------------------------------------------------------
     def run_to_completion(self, max_iters: int = 10_000) -> Dict[str, float]:
-        t0 = time.perf_counter()
-        emitted = 0
-        iters = 0
-        while (self.pending or self.running) and iters < max_iters:
-            emitted += self.step()
-            iters += 1
-        dt = time.perf_counter() - t0
+        """Drain the queue; every metric covers THIS call's window (the
+        requests completed here), so repeated calls stay self-consistent.
+        Latency percentiles cover the window's tail still inside the
+        bounded ``keep_completed`` history."""
+        done0 = self.total_completed
+        emitted, dt = drain(self, max_iters)
+        done = self.total_completed - done0
+        window = self.completed[-done:] if done else []
         return {"tokens": emitted, "seconds": dt,
                 "tokens_per_s": emitted / dt if dt else 0.0,
-                "completed": len(self.completed)}
+                "completed": done,
+                **latency_stats(window)}

@@ -1,0 +1,234 @@
+"""GNN serving engine: continuous batching over the FeaturePlane —
+admission/eviction, train→serve plane sharing, cpu/device parity, and
+streaming feature updates reflected in predictions (the acceptance bar)."""
+import numpy as np
+import pytest
+
+from repro.core.a3gnn import A3GNNTrainer
+from repro.core.cache import FeatureCache
+from repro.core.feature_plane import (DeviceFeaturePlane, HostFeaturePlane,
+                                      make_feature_plane)
+from repro.graph.storage import FeatureStore
+from repro.serve.common import admit_pending, latency_stats
+from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
+
+
+def _fresh_graph(seed=0):
+    """Function-local graph: streaming tests mutate features, so they
+    must not share the session-scoped fixture."""
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    return dataset_like(gnn_config("products", smoke=True), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: admission, completion, slot recycling
+# ---------------------------------------------------------------------------
+
+def test_engine_completes_all_requests(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    eng = GNNInferenceEngine.from_trainer(tr, batch=3, seed=0)
+    rng = np.random.default_rng(0)
+    nodes = rng.integers(0, smoke_graph.num_nodes, 8)   # > slots
+    for rid, v in enumerate(nodes):
+        eng.submit(GNNRequest(rid=rid, node=int(v)))
+    stats = eng.run_to_completion()
+    assert stats["completed"] == 8
+    assert eng.free_slots() == [0, 1, 2]                # all slots recycled
+    assert eng.utilization() == 0.0
+    assert stats["engine_steps"] >= 3                   # 8 queries / 3 slots
+    for req in eng.completed:
+        assert 0 <= req.pred < smoke_graph.num_classes
+        assert req.logits.shape == (smoke_graph.num_classes,)
+        assert req.t_done >= req.t_submit
+    assert stats["p99_ms"] >= stats["p50_ms"] > 0.0
+
+
+def test_engine_duplicate_nodes_stay_fifo(smoke_graph, smoke_gnn_cfg):
+    """Seeds must be unique per step: same-node queries serialize across
+    engine iterations instead of corrupting the sampled batch."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    eng = GNNInferenceEngine.from_trainer(tr, batch=4, seed=0)
+    for rid in range(5):
+        eng.submit(GNNRequest(rid=rid, node=17))
+    stats = eng.run_to_completion()
+    assert stats["completed"] == 5
+    assert stats["engine_steps"] == 5                   # one per duplicate
+    rids = [r.rid for r in eng.completed]
+    assert rids == sorted(rids)                         # FIFO preserved
+    # (predictions may differ across duplicates — each engine step samples
+    # the node's neighborhood afresh, by design)
+
+
+def test_engine_rejects_bad_node_and_oversized_batch(smoke_graph,
+                                                     smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    eng = GNNInferenceEngine.from_trainer(tr, batch=2, seed=0)
+    with pytest.raises(ValueError):
+        eng.submit(GNNRequest(rid=0, node=smoke_graph.num_nodes))
+    with pytest.raises(ValueError):
+        GNNInferenceEngine.from_trainer(tr,
+                                        batch=smoke_graph.num_nodes + 1)
+
+
+def test_engine_bounds_completed_history(smoke_graph, smoke_gnn_cfg):
+    """Online serving must not grow per-query state forever: the retained
+    result history is capped while the per-call stats stay correct."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    eng = GNNInferenceEngine(smoke_graph, smoke_gnn_cfg, tr.params,
+                             batch=2, seed=0, keep_completed=3)
+    for rid in range(7):
+        eng.submit(GNNRequest(rid=rid, node=rid + 50))
+    stats = eng.run_to_completion()
+    assert stats["completed"] == 7 and eng.total_completed == 7
+    assert len(eng.completed) == 3                      # bounded history
+    assert [r.rid for r in eng.completed] == [4, 5, 6]  # most recent kept
+    assert stats["p50_ms"] > 0.0                        # window still sane
+
+
+def test_admission_seam_shared_semantics():
+    """The serve/common.py helper keeps the pre-seam engine semantics:
+    FIFO order, head-of-line blocking on an unplaceable request."""
+    pending = ["a", "b", "c"]
+    running = {}
+    slots = [0, 1]
+    admitted = admit_pending(pending, running,
+                             lambda r: slots.pop(0) if slots else None)
+    assert admitted == 2 and pending == ["c"]
+    assert running == {0: "a", 1: "b"}
+    # no capacity → head blocks, nothing admitted
+    assert admit_pending(pending, running, lambda r: None) == 0
+    assert pending == ["c"]
+    assert latency_stats([])["p50_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the FeaturePlane is SHARED between training and serving
+# ---------------------------------------------------------------------------
+
+def test_serving_through_the_trainer_plane_shares_stats(smoke_graph,
+                                                        smoke_gnn_cfg):
+    """Acceptance: the engine serves through the same FeaturePlane
+    instance the trainer's pipeline built — one accounting stream."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    pipe = tr.make_pipeline()
+    try:
+        pipe.run(max_steps=2)
+        trained_hits = tr.cache.stats.hits
+        assert trained_hits > 0
+        eng = GNNInferenceEngine.from_trainer(tr, batch=4, plane=pipe.plane,
+                                              seed=0)
+        assert eng.plane is pipe.plane                  # the instance, not a copy
+        for rid in range(6):
+            eng.submit(GNNRequest(rid=rid, node=rid + 100))
+        stats = eng.run_to_completion()
+        assert stats["completed"] == 6
+        # serving pushed the trainer's own hit/miss accounting forward
+        assert tr.cache.stats.hits > trained_hits
+        assert stats["cache_hit_rate"] == tr.cache.stats.hit_rate
+    finally:
+        pipe.shutdown()
+
+
+@pytest.mark.parametrize("policy", ["static", "fifo"])
+def test_serving_cpu_device_parity(smoke_graph, smoke_gnn_cfg, policy):
+    """Same request stream, same sampler seed: the host and device planes
+    produce bit-exact logits, identical predictions, identical stats."""
+    cfg = smoke_gnn_cfg.replace(cache_policy=policy)
+    tr = A3GNNTrainer(smoke_graph, cfg, seed=0)
+    planes = (HostFeaturePlane(smoke_graph,
+                               FeatureCache(smoke_graph, 0.05, policy)),
+              DeviceFeaturePlane(smoke_graph,
+                                 FeatureCache(smoke_graph, 0.05, policy)))
+    engines = [GNNInferenceEngine(smoke_graph, cfg, tr.params, plane=p,
+                                  batch=3, seed=7) for p in planes]
+    rng = np.random.default_rng(1)
+    nodes = rng.integers(0, smoke_graph.num_nodes, 7)
+    for eng in engines:
+        for rid, v in enumerate(nodes):
+            eng.submit(GNNRequest(rid=rid, node=int(v)))
+        eng.run_to_completion()
+    host_eng, dev_eng = engines
+    for a, b in zip(host_eng.completed, dev_eng.completed):
+        assert a.rid == b.rid and a.pred == b.pred
+        assert np.array_equal(a.logits, b.logits)       # bit-exact
+    sh, sd = planes[0].cache.stats, planes[1].cache.stats
+    assert (sh.hits, sh.misses) == (sd.hits, sd.misses)
+
+
+# ---------------------------------------------------------------------------
+# streaming updates mid-serving (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampling_device", ["cpu", "device"])
+def test_stream_update_reflected_in_predictions(smoke_gnn_cfg,
+                                                sampling_device):
+    """A FeatureStore update made mid-serving is observed bit-exactly by
+    the live plane and reflected in subsequent predictions, on both
+    backends.  Controlled by a twin engine with identical seeds that
+    receives NO update: its second query isolates the drift effect from
+    sampler-RNG advancement."""
+    cfg = smoke_gnn_cfg.replace(sampling_device=sampling_device)
+
+    def build():
+        graph = _fresh_graph()              # identical content per seed
+        tr = A3GNNTrainer(graph, cfg, seed=0)
+        plane = make_feature_plane(graph, tr.cache, sampling_device)
+        eng = GNNInferenceEngine(graph, cfg, tr.params, plane=plane,
+                                 batch=2, seed=11)
+        return graph, tr, eng
+
+    graph_u, tr_u, updated = build()
+    graph_c, _, control = build()
+    # serve a cache-RESIDENT node before the update (forces a mirror sync)
+    node = int(np.where(tr_u.cache.device_map >= 0)[0][0])
+    for eng in (updated, control):
+        eng.submit(GNNRequest(rid=0, node=node))
+        eng.run_to_completion()
+    assert np.array_equal(updated.completed[0].logits,
+                          control.completed[0].logits)   # twins agree
+
+    store = FeatureStore(graph_u)
+    updated.plane.subscribe_to(store)
+    rows = np.full((1, graph_u.feat_dim), 4.25, np.float32)
+    v_cache = tr_u.cache.version
+    store.update_rows(np.array([node]), rows)
+    assert store.version == 1
+    assert tr_u.cache.version > v_cache      # resident copy → mirrors re-sync
+    # the plane serves the updated row bit-exactly (this IS the feature
+    # the next sampled batch gathers for the seed)
+    np.testing.assert_array_equal(updated.plane.fetch(np.array([node])),
+                                  rows)
+    np.testing.assert_array_equal(
+        control.plane.fetch(np.array([node])), graph_c.features[[node]])
+
+    for eng in (updated, control):
+        eng.submit(GNNRequest(rid=1, node=node))
+        eng.run_to_completion()
+    # same RNG sequence, same params — ONLY the streamed row differs,
+    # so diverging logits prove the prediction consumed the drift
+    assert not np.array_equal(updated.completed[1].logits,
+                              control.completed[1].logits)
+
+
+def test_stream_update_parity_across_backends(smoke_gnn_cfg):
+    """Post-update predictions agree bit-exactly between cpu and device
+    engines driven with the same seed."""
+    results = []
+    for dev in ("cpu", "device"):
+        graph = _fresh_graph()
+        cfg = smoke_gnn_cfg.replace(sampling_device=dev)
+        tr = A3GNNTrainer(graph, cfg, seed=0)
+        plane = make_feature_plane(graph, tr.cache, dev)
+        eng = GNNInferenceEngine(graph, cfg, tr.params, plane=plane,
+                                 batch=2, seed=3)
+        store = FeatureStore(graph)
+        eng.plane.subscribe_to(store)
+        node = int(np.where(tr.cache.device_map >= 0)[0][1])
+        store.update_rows(np.array([node]),
+                          np.full((1, graph.feat_dim), -2.5, np.float32))
+        eng.submit(GNNRequest(rid=0, node=node))
+        eng.run_to_completion()
+        results.append(eng.completed[0])
+    assert results[0].pred == results[1].pred
+    assert np.array_equal(results[0].logits, results[1].logits)

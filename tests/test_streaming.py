@@ -1,0 +1,271 @@
+"""Streaming feature updates: FeatureStore.update_rows → FeatureCache
+version bump → DeviceFeaturePlane mirror re-sync → bounded periodic halo
+re-fill, with updated rows observed bit-exactly on cpu AND device planes."""
+import numpy as np
+import pytest
+
+from repro.core.a3gnn import A3GNNTrainer
+from repro.core.cache import FeatureCache
+from repro.core.feature_plane import DeviceFeaturePlane, HostFeaturePlane
+from repro.core.multipart import MultiPartitionTrainer
+from repro.graph.storage import FeatureStore
+
+
+def _fresh_graph(seed=0):
+    """Streaming tests mutate features — never share the session fixture."""
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    return dataset_like(gnn_config("products", smoke=True), seed=seed)
+
+
+def _smoke_cfg():
+    from repro.configs.gnn import gnn_config
+    return gnn_config("products", smoke=True)
+
+
+# ---------------------------------------------------------------------------
+# store → cache → mirror invalidation chain
+# ---------------------------------------------------------------------------
+
+def test_update_rows_bumps_versions_and_resyncs_mirror():
+    graph = _fresh_graph()
+    host = HostFeaturePlane(graph, FeatureCache(graph, 0.05, "static"))
+    dev = DeviceFeaturePlane(graph, FeatureCache(graph, 0.05, "static"))
+    store = FeatureStore(graph)
+    host.subscribe_to(store)
+    dev.subscribe_to(store)
+
+    resident = int(np.where(dev.cache.device_map >= 0)[0][0])
+    absent = int(np.where(dev.cache.device_map < 0)[0][0])
+    ids = np.array([resident, absent])
+    host.fetch(ids)
+    dev.fetch(ids)                          # forces a device mirror upload
+    mirror_v = dev._version
+    cache_v = dev.cache.version
+
+    rows = np.stack([np.full(graph.feat_dim, 1.5, np.float32),
+                     np.full(graph.feat_dim, -3.0, np.float32)])
+    assert store.update_rows(ids, rows) == 1
+    assert store.rows_updated == 2
+    # the resident row invalidates the device mirror through the version
+    assert dev.cache.version > cache_v
+    assert host.cache.version == dev.cache.version  # same chain on both
+    # both planes serve the updated rows bit-exactly (resident AND missed)
+    np.testing.assert_array_equal(host.fetch(ids), rows)
+    np.testing.assert_array_equal(dev.fetch(ids), rows)
+    assert dev._version > mirror_v                  # mirror re-uploaded
+
+
+def test_update_rows_validates_shape():
+    graph = _fresh_graph()
+    store = FeatureStore(graph)
+    with pytest.raises(ValueError):
+        store.update_rows(np.array([0, 1]),
+                          np.zeros((2, graph.feat_dim + 1), np.float32))
+
+
+def test_cache_refresh_rows_pull_side():
+    """refresh_rows is the pull twin of fill_rows: a consumer that only
+    learns WHICH rows moved re-copies them from the store."""
+    graph = _fresh_graph()
+    cache = FeatureCache(graph, 0.05, "static")
+    resident = int(np.where(cache.device_map >= 0)[0][0])
+    absent = int(np.where(cache.device_map < 0)[0][0])
+    graph.features[resident] = 7.25                 # direct store write
+    graph.features[absent] = 7.25
+    v = cache.version
+    assert cache.refresh_rows(np.array([resident, absent])) == 1
+    assert cache.version == v + 1
+    np.testing.assert_array_equal(cache.fetch(np.array([resident]))[0],
+                                  graph.features[resident])
+    # no resident rows → no version churn (mirrors must not re-upload)
+    assert cache.refresh_rows(np.array([absent])) == 0
+    assert cache.version == v + 1
+
+
+# ---------------------------------------------------------------------------
+# multi-partition: owned routing + bounded periodic halo re-fill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampling_device", ["cpu", "device"])
+def test_multipart_stream_update_and_halo_refresh(sampling_device):
+    """update_rows routes owned rows into the owner's plane immediately;
+    the stale halo copy on the other partition catches up at the periodic
+    refresh boundary, bit-exactly, on both backends."""
+    cfg = _smoke_cfg().replace(partitions=2, halo_budget=32,
+                               halo_refresh_interval=2,
+                               sampling_device=sampling_device)
+    graph = _fresh_graph()
+    tr = MultiPartitionTrainer(graph, cfg, seed=0)
+    try:
+        store = tr.attach_feature_store()
+        assert tr.feature_store is store
+        # a halo node of partition 1 that partition 0 owns
+        node = next(int(c) for c in tr.plan.halo_sets[1]
+                    if tr.plan.owner[c] == 0)
+        loc0 = tr._local_id(0, node)
+        loc1 = tr._local_id(1, node)
+        assert 0 <= loc0 < tr.slots[0].n_owned <= loc1
+
+        rows = np.full((1, graph.feat_dim), 9.5, np.float32)
+        store.update_rows(np.array([node]), rows)
+        # owner partition observes the row NOW, through its plane
+        np.testing.assert_array_equal(
+            tr.slots[0].pipe.plane.fetch(np.array([loc0])), rows)
+        # partition 1's halo copy is stale until the bounded refresh
+        assert not np.array_equal(tr.slots[1].graph.features[loc1], rows[0])
+        assert tr._halo_dirty
+
+        tr.global_step()                     # step 1: interval not reached
+        assert tr.halo_refreshes == 0
+        tr.global_step()                     # step 2: refresh fires
+        assert tr.halo_refreshes == 1 and not tr._halo_dirty
+        np.testing.assert_array_equal(
+            tr.slots[1].pipe.plane.fetch(np.array([loc1])), rows)
+
+        # quiescent stores don't trigger refreshes
+        tr.global_step()
+        tr.global_step()
+        assert tr.halo_refreshes == 1
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()
+
+
+def test_multipart_refresh_is_explicit_without_interval():
+    """interval=0: stale halo rows wait for refresh_halo_features()."""
+    cfg = _smoke_cfg().replace(partitions=2, halo_budget=16)
+    graph = _fresh_graph()
+    tr = MultiPartitionTrainer(graph, cfg, seed=0)
+    try:
+        store = tr.attach_feature_store()
+        node = next(int(c) for c in tr.plan.halo_sets[1]
+                    if tr.plan.owner[c] == 0)
+        loc1 = tr._local_id(1, node)
+        rows = np.full((1, graph.feat_dim), -4.5, np.float32)
+        store.update_rows(np.array([node]), rows)
+        tr.global_step()
+        assert tr.halo_refreshes == 0 and tr._halo_dirty
+        volume = tr.refresh_halo_features()
+        assert volume == tr.plan.exchange_volume_bytes(graph) > 0
+        np.testing.assert_array_equal(tr.slots[1].graph.features[loc1],
+                                      rows[0])
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()
+
+
+def test_plane_tracks_at_most_one_store_subscription():
+    """Repeated subscribe_to must not leave un-removable stale
+    subscriptions: a plane tracks exactly one store, and re-subscribing
+    moves it."""
+    graph = _fresh_graph()
+    plane = HostFeaturePlane(graph, FeatureCache(graph, 0.05, "static"))
+    s1, s2 = FeatureStore(graph), FeatureStore(graph)
+    plane.subscribe_to(s1)
+    plane.subscribe_to(s1)                       # idempotent, not doubled
+    assert len(s1._subscribers) == 1
+    plane.subscribe_to(s2)                       # moves the subscription
+    assert len(s1._subscribers) == 0 and len(s2._subscribers) == 1
+    assert plane.store is s2
+    plane.detach_store()
+    assert len(s2._subscribers) == 0 and plane.store is None
+
+
+def test_plane_swap_migrates_store_subscription():
+    """Pipeline.reconfigure replaces the plane object (cache swap or
+    cpu↔device migration); an attached store must follow the LIVE plane
+    — the dead plane unsubscribes, the successor observes updates."""
+    from repro.core.pipeline import Pipeline
+    graph = _fresh_graph()
+    cfg = _smoke_cfg().replace(cache_volume_mb=0.0)     # start cacheless
+    tr = A3GNNTrainer(graph, cfg, seed=0)
+    pipe = Pipeline(graph, cfg, tr._train_fn, cache=None, seed=0)
+    try:
+        store = FeatureStore(graph)
+        old_plane = pipe.plane.subscribe_to(store)
+        new_cache = FeatureCache(graph, 0.05, "static")
+        pipe.reconfigure(cache=new_cache)               # plane rebuilt
+        assert pipe.plane is not old_plane
+        assert old_plane.store is None                  # dead plane detached
+        assert pipe.plane.store is store                # successor attached
+        assert len(store._subscribers) == 1             # exactly one writer
+        resident = int(np.where(new_cache.device_map >= 0)[0][0])
+        rows = np.full((1, graph.feat_dim), 8.5, np.float32)
+        store.update_rows(np.array([resident]), rows)
+        np.testing.assert_array_equal(
+            pipe.plane.fetch(np.array([resident])), rows)
+    finally:
+        pipe.shutdown()
+
+
+def test_single_partition_attach_refreshes_cache_and_detach_stops():
+    graph = _fresh_graph()
+    tr = A3GNNTrainer(graph, _smoke_cfg(), seed=0)
+    store = tr.attach_feature_store()
+    node = int(np.where(tr.cache.device_map >= 0)[0][0])
+    rows = np.full((1, graph.feat_dim), 5.5, np.float32)
+    v = tr.cache.version
+    store.update_rows(np.array([node]), rows)
+    assert tr.cache.version > v                  # resident copy refreshed
+    np.testing.assert_array_equal(tr.cache.fetch(np.array([node])), rows)
+    tr.detach_feature_store()
+    assert tr.feature_store is None
+    store.update_rows(np.array([node]),
+                      np.full((1, graph.feat_dim), -1.0, np.float32))
+    # detached: the resident copy intentionally no longer tracks the store
+    np.testing.assert_array_equal(tr.cache.fetch(np.array([node])), rows)
+    # a worker-partition trainer has no global view to subscribe
+    tr2 = A3GNNTrainer(graph, _smoke_cfg().replace(partitions=2), seed=0)
+    with pytest.raises(ValueError):
+        tr2.attach_feature_store()
+
+
+def test_partitions_restart_migrates_feature_store():
+    """The autotune restart path re-homes an attached store: the dead
+    trainer detaches, the rebuilt trainer observes subsequent updates."""
+    from repro.configs.gnn import AutotuneConfig
+    from repro.core.autotune.controller import AutotuneController
+    cfg = _smoke_cfg().replace(partitions=2, halo_budget=8)
+    graph = _fresh_graph()
+    tr = MultiPartitionTrainer(graph, cfg, seed=0)
+    ctrl = AutotuneController(tr, tr.make_pipeline(),
+                              AutotuneConfig(max_partitions=2, seed=0))
+    store = tr.attach_feature_store()
+    try:
+        ctrl._restart(1)                         # rebuild single-partition
+        new_tr = ctrl.tr
+        assert new_tr is not tr
+        assert tr.feature_store is None          # old trainer detached
+        assert new_tr.feature_store is store     # same store, new consumer
+        node = int(np.where(new_tr.cache.device_map >= 0)[0][0])
+        rows = np.full((1, graph.feat_dim), 6.5, np.float32)
+        store.update_rows(np.array([node]), rows)
+        np.testing.assert_array_equal(new_tr.cache.fetch(np.array([node])),
+                                      rows)
+    finally:
+        ctrl.pipe.shutdown()
+
+
+def test_multipart_update_of_unowned_halo_free_node_is_local():
+    """An update touching no halo copy must not mark the fleet dirty."""
+    cfg = _smoke_cfg().replace(partitions=2, halo_budget=8)
+    graph = _fresh_graph()
+    tr = MultiPartitionTrainer(graph, cfg, seed=0)
+    try:
+        store = tr.attach_feature_store()
+        in_halo = np.zeros(graph.num_nodes, bool)
+        for hs in tr.plan.halo_sets:
+            in_halo[hs] = True
+        node = int(np.where(~in_halo)[0][0])
+        store.update_rows(np.array([node]),
+                          np.full((1, graph.feat_dim), 2.0, np.float32))
+        assert not tr._halo_dirty
+        p = int(tr.plan.owner[node])
+        loc = tr._local_id(p, node)
+        np.testing.assert_array_equal(
+            tr.slots[p].pipe.plane.fetch(np.array([loc]))[0],
+            np.full(graph.feat_dim, 2.0, np.float32))
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()
