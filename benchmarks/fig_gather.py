@@ -5,11 +5,18 @@ with a static hotness cache: the SAME request stream is served by
 ``HostFeaturePlane`` (FeatureCache.fetch) and ``DeviceFeaturePlane``
 (slot lookup + ``kernels/gather.cache_gather`` on the device-resident
 table, host fallback for misses).  Parity is asserted bit-exactly before
-timing, so the numbers compare identical work.  On this CPU container
-the device plane runs the kernel in interpret mode — the comparison
-shows the seam and the crossover shape, not TPU silicon.
+timing, so the numbers compare identical work.  The ``streamed`` section
+measures the mirror-sync pathology this repo fixed: a feature stream
+dirties a few resident rows between every fetch, and the device plane is
+timed with incremental sync (per-row delta scatter) against the old
+behavior (``incremental_sync=False`` — whole-mirror re-upload on every
+version bump), with the sync counters reported alongside.  On this CPU
+container the comparison shows the seam and the crossover shape, not
+TPU silicon.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -20,6 +27,42 @@ from repro.graph.synthetic import dataset_like
 
 BATCH_ROWS = (256, 1024, 4096)
 BATCH_ROWS_QUICK = (128, 512)
+STREAM_ROUNDS = 20
+STREAM_DIRTY_ROWS = 8
+
+
+def _sync_counters(dev):
+    return {"full_uploads": dev.sync_full_uploads,
+            "row_scatters": dev.sync_row_scatters,
+            "rows_scattered": dev.sync_rows_scattered,
+            "bytes_uploaded": dev.sync_bytes_uploaded}
+
+
+def _streamed_device(graph, ids, rounds, incremental, seed=1):
+    """µs/row for fetches interleaved with streamed row updates.  The
+    mirror holds half the feature set, the realistic regime where a
+    whole-table re-upload per streamed row actually hurts."""
+    from repro.graph.storage import FeatureStore
+    volume_mb = graph.num_nodes * graph.feat_dim * 4 / 2**20 * 0.5
+    cache = FeatureCache(graph, volume_mb, "static")
+    dev = DeviceFeaturePlane(graph, cache, incremental_sync=incremental)
+    store = FeatureStore(graph)
+    dev.subscribe_to(store)
+    rng = np.random.default_rng(seed)
+    resident = np.where(cache.device_map >= 0)[0]
+
+    def one_round():
+        upd = rng.choice(resident, STREAM_DIRTY_ROWS, replace=False)
+        store.update_rows(upd, graph.features[upd] + 0.125)
+        dev.fetch(ids)
+
+    dev.fetch(ids)          # upload + gather jit warmup
+    one_round()             # sync-path (scatter / re-upload) jit warmup
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        one_round()
+    dt = (time.perf_counter() - t0) / rounds
+    return dt / len(ids) * 1e6, _sync_counters(dev)
 
 
 def run(quick: bool = False):
@@ -29,7 +72,7 @@ def run(quick: bool = False):
     graph = dataset_like(cfg, seed=0)
     rng = np.random.default_rng(0)
 
-    results = {"feat_dim": graph.feat_dim, "rows": {}}
+    results = {"feat_dim": graph.feat_dim, "rows": {}, "streamed": {}}
     for n in (BATCH_ROWS_QUICK if quick else BATCH_ROWS):
         ids = rng.integers(0, graph.num_nodes, n)
         host = HostFeaturePlane(graph, FeatureCache(
@@ -45,10 +88,40 @@ def run(quick: bool = False):
             "host_us_per_row": t_host / n * 1e6,
             "device_us_per_row": t_dev / n * 1e6,
             "hit_rate": hit,
+            "sync": _sync_counters(dev),              # static cache: 1 upload
         }
         emit(f"gather/host_n{n}", t_host / n * 1e6,
              f"hit={hit:.2f} total={t_host*1e3:.2f}ms")
         emit(f"gather/device_n{n}", t_dev / n * 1e6,
-             f"hit={hit:.2f} total={t_dev*1e3:.2f}ms")
+             f"hit={hit:.2f} total={t_dev*1e3:.2f}ms "
+             f"full_uploads={dev.sync_full_uploads}")
+
+    # --- streamed updates: incremental delta scatter vs whole-mirror ---
+    rounds = 5 if quick else STREAM_ROUNDS
+    n = BATCH_ROWS_QUICK[-1] if quick else BATCH_ROWS[1]
+    ids = rng.integers(0, graph.num_nodes, n)
+    us_inc, sync_inc = _streamed_device(graph, ids, rounds,
+                                        incremental=True)
+    us_full, sync_full = _streamed_device(graph, ids, rounds,
+                                          incremental=False)
+    results["streamed"] = {
+        "batch_rows": n, "rounds": rounds,
+        "dirty_rows_per_round": STREAM_DIRTY_ROWS,
+        "incremental_us_per_row": us_inc,
+        "full_reupload_us_per_row": us_full,
+        "speedup": us_full / us_inc,
+        "sync_traffic_ratio": (sync_full["bytes_uploaded"]
+                               / max(sync_inc["bytes_uploaded"], 1)),
+        "incremental_sync": sync_inc,
+        "full_reupload_sync": sync_full,
+    }
+    emit(f"gather/streamed_incremental_n{n}", us_inc,
+         f"full_uploads={sync_inc['full_uploads']} "
+         f"rows_scattered={sync_inc['rows_scattered']} "
+         f"bytes={sync_inc['bytes_uploaded']}")
+    emit(f"gather/streamed_full_reupload_n{n}", us_full,
+         f"full_uploads={sync_full['full_uploads']} "
+         f"bytes={sync_full['bytes_uploaded']} "
+         f"traffic_ratio={results['streamed']['sync_traffic_ratio']:.0f}x")
     save_json("fig_gather", results)
     return results

@@ -12,8 +12,9 @@
 #          resolve, and every doc must be linked from README.md
 #          (offline-safe, stdlib).  Runs in lane 1 (the fast job)
 #          alongside the fast tests.
-#   kernels: the Pallas kernel oracles + the FeaturePlane host/device
-#          parity tests + the streaming-update mirror re-sync tests —
+#   kernels: the Pallas kernel oracles (fused gather+aggregate included)
+#          + the FeaturePlane host/device parity tests (incremental
+#          mirror sync) + the streaming-update mirror re-sync tests —
 #          the focused signal for accelerator-path changes
 #          (also part of the fast job, as its own JUnit artifact).
 #   fast:  everything except tests marked `slow` — the sub-minute signal
@@ -68,12 +69,13 @@ case "$LANE" in
         run_lane docs python scripts/check_docs.py ;;
     kernels)
         run_lane kernels python -m pytest -x -q \
-            tests/test_kernels.py tests/test_feature_plane.py \
-            tests/test_streaming.py \
+            tests/test_kernels.py tests/test_fused_agg.py \
+            tests/test_feature_plane.py tests/test_streaming.py \
             --junitxml "$ART/junit_kernels.xml" ;;
     fast)
         run_lane fast python -m pytest -x -q -m "not slow" \
             --ignore tests/test_kernels.py \
+            --ignore tests/test_fused_agg.py \
             --ignore tests/test_feature_plane.py \
             --ignore tests/test_streaming.py \
             --junitxml "$ART/junit_fast.xml" ;;
@@ -84,11 +86,12 @@ case "$LANE" in
         run_lane lint lint_cmd
         run_lane docs python scripts/check_docs.py
         run_lane kernels python -m pytest -x -q \
-            tests/test_kernels.py tests/test_feature_plane.py \
-            tests/test_streaming.py \
+            tests/test_kernels.py tests/test_fused_agg.py \
+            tests/test_feature_plane.py tests/test_streaming.py \
             --junitxml "$ART/junit_kernels.xml"
         run_lane fast python -m pytest -x -q -m "not slow" \
             --ignore tests/test_kernels.py \
+            --ignore tests/test_fused_agg.py \
             --ignore tests/test_feature_plane.py \
             --ignore tests/test_streaming.py \
             --junitxml "$ART/junit_fast.xml"

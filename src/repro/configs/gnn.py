@@ -86,6 +86,11 @@ class GNNConfig:
     cache_volume_mb: float = 40.0       # Θ
     cache_policy: str = "static"        # static (hotness) | fifo
     sampling_device: str = "cpu"        # cpu | device | auto (probe jax.devices)
+    # fused gather+aggregate layer-0 kernel (kernels/fused_gather_agg):
+    # batch generation emits (h_dst, neighbor-mean) pre-aggregates instead
+    # of the input-hop feature tensor; GraphSAGE only (other models fall
+    # back to the unfused path)
+    fused_gather_agg: bool = False
     workers: int = 2
     parallel_mode: str = "seq"          # seq | mode1 | mode2
     partitions: int = 1

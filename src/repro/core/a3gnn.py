@@ -28,7 +28,8 @@ from repro.core.sampling import NeighborSampler, seed_loader
 from repro.graph.batch import generate_batch, batch_device_arrays
 from repro.graph.partition import partition, overlap_ratio
 from repro.graph.storage import FeatureStreamConsumer, Graph
-from repro.models.gnn import decls_gnn, make_train_step, make_eval_fn
+from repro.models.gnn import (decls_gnn, make_train_step,
+                              make_train_step_fused, make_eval_fn)
 from repro.models.params import init_params, param_bytes
 from repro.train.checkpoint import TrainerCheckpointMixin
 from repro.train.optimizer import make_adamw
@@ -77,7 +78,7 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.graph = parts[0]                       # worker 0's partition
         self.eta = overlap_ratio(self.graph, graph)
         self.cache = (FeatureCache(self.graph, cfg.cache_volume_mb,
-                                   cfg.cache_policy, seed)
+                                   cfg.cache_policy)
                       if cfg.cache_volume_mb > 0 else None)
         self.weight_fn = (bias_weight_fn(self.cache, cfg.bias_rate)
                           if (self.cache is not None and cfg.bias_rate > 1.0)
@@ -88,6 +89,8 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.opt = make_adamw()
         self.opt_state = self.opt.init(self.params)
         self._step = make_train_step(cfg, self.opt)
+        self._step_fused = (make_train_step_fused(cfg, self.opt)
+                            if cfg.model == "graphsage" else None)
         self._eval = make_eval_fn(cfg)
 
     # ------------------------------------------------------------------
@@ -112,9 +115,14 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
     # ------------------------------------------------------------------
     def _train_fn(self, mb):
         arrays = batch_device_arrays(mb)
-        self.params, self.opt_state, loss, acc = self._step(
-            self.params, self.opt_state, arrays["features"],
-            arrays["neigh_idxs"], arrays["labels"])
+        if "agg0" in arrays:                   # fused layer-0 batch path
+            self.params, self.opt_state, loss, acc = self._step_fused(
+                self.params, self.opt_state, arrays["h_dst0"],
+                arrays["agg0"], arrays["neigh_idxs"], arrays["labels"])
+        else:
+            self.params, self.opt_state, loss, acc = self._step(
+                self.params, self.opt_state, arrays["features"],
+                arrays["neigh_idxs"], arrays["labels"])
         return float(loss), float(acc)
 
     # ------------------------------------------------------------------
@@ -270,7 +278,7 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
                 self.cache = None
             elif self.cache is None:
                 self.cache = FeatureCache(self.graph, vol,
-                                          self.cfg.cache_policy, self.seed)
+                                          self.cfg.cache_policy)
             else:
                 self.cache.resize(vol)
         if "cache_volume_mb" in updates or "bias_rate" in updates:

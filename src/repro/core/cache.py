@@ -41,8 +41,7 @@ class CacheStats:
 
 
 class FeatureCache:
-    def __init__(self, graph: Graph, volume_mb: float, policy: str = "static",
-                 seed: int = 0):
+    def __init__(self, graph: Graph, volume_mb: float, policy: str = "static"):
         self.g = graph
         self.policy = policy
         self.stats = CacheStats()
@@ -52,9 +51,16 @@ class FeatureCache:
         """(Re)allocate storage for ``volume_mb`` and warm it per policy.
         ``self.stats`` is untouched — hit/miss accounting survives resizes.
         ``version`` advances on every (re)allocation so device-resident
-        mirrors (core/feature_plane.py DeviceFeaturePlane) know to re-sync."""
+        mirrors (core/feature_plane.py DeviceFeaturePlane) know to re-sync;
+        ``epoch`` advances too, marking a full invalidation — the buffers
+        themselves were reallocated, so row-wise deltas from before this
+        point are meaningless to a mirror."""
         graph = self.g
         self.version = getattr(self, "version", -1) + 1
+        self.epoch = getattr(self, "epoch", -1) + 1
+        self._delta_log = []            # [(version, dirty_slots, dirty_ids)]
+        self._delta_floor = self.version  # oldest version deltas can bridge
+        self._delta_rows = 0            # total rows across the log (bound)
         self.volume_mb = float(volume_mb)
         row_bytes = graph.feat_dim * 4
         self.capacity = max(int(volume_mb * 2**20 / row_bytes), 0)
@@ -97,6 +103,44 @@ class FeatureCache:
             self.storage[:n] = self.g.features[keep]
             self._fifo_head = n % self.capacity
 
+    # -- dirty-row delta log -------------------------------------------------
+    def _record_delta(self, dirty_slots: np.ndarray, dirty_ids: np.ndarray):
+        """Advance ``version`` by exactly one and remember WHICH rows moved.
+
+        ``dirty_slots`` are storage rows whose contents changed;
+        ``dirty_ids`` are node ids whose ``device_map`` entry changed.
+        Device mirrors (core/feature_plane.py) consume the log through
+        ``deltas_since`` to scatter only dirty rows instead of re-uploading
+        the whole table.  The log is bounded: once it accumulates more
+        dirty rows than the table holds, an incremental replay costs more
+        than a full upload, so we drop it and raise ``_delta_floor`` —
+        stale mirrors then fall back to a full re-upload."""
+        self.version += 1
+        self._delta_log.append((self.version,
+                                np.asarray(dirty_slots, np.int32).copy(),
+                                np.asarray(dirty_ids, np.int64).copy()))
+        self._delta_rows += len(dirty_slots) + len(dirty_ids)
+        if self._delta_rows > 2 * max(self.capacity, 1):
+            self._delta_log = []
+            self._delta_rows = 0
+            self._delta_floor = self.version
+
+    def deltas_since(self, version: int, epoch: int):
+        """Cumulative dirty set between a mirror's ``(version, epoch)`` and
+        now, or ``None`` if only a full re-upload can bridge the gap
+        (reallocation, or the bounded log was dropped).  Returns
+        ``(dirty_slots, dirty_ids)`` — unique, final-state row indices: the
+        caller reads current ``storage``/``device_map`` contents, so replay
+        order is irrelevant."""
+        if epoch != self.epoch or version < self._delta_floor:
+            return None
+        slots = [s for v, s, _ in self._delta_log if v > version]
+        ids = [i for v, _, i in self._delta_log if v > version]
+        return (np.unique(np.concatenate(slots)) if slots
+                else np.empty(0, np.int32),
+                np.unique(np.concatenate(ids)) if ids
+                else np.empty(0, np.int64))
+
     # -- streaming updates ---------------------------------------------------
     def patch_resident(self, ids: np.ndarray, rows: np.ndarray) -> int:
         """Overwrite the cache-resident copies among ``ids`` with the
@@ -111,7 +155,9 @@ class FeatureCache:
         hit = slots >= 0
         if hit.any():
             self.storage[slots[hit]] = rows[hit]
-            self.version += 1           # device mirrors must re-sync
+            # device mirrors must re-sync, but only the patched rows —
+            # the slot map is untouched
+            self._record_delta(slots[hit], np.empty(0, np.int64))
         return int(hit.sum())
 
     def refresh_rows(self, ids: np.ndarray) -> int:
@@ -162,14 +208,21 @@ class FeatureCache:
             self._fifo_insert(np.unique(miss_ids))
 
     def _fifo_insert(self, ids: np.ndarray):
-        self.version += 1               # slot map mutates → mirrors re-sync
+        dirty_slots = []
+        dirty_ids = []                  # evicted owners AND inserted ids
         for v in ids:
             slot = self._fifo_head
             old = self.slot_owner[slot]
             if old >= 0:
                 self.device_map[old] = -1
                 self.stats.evictions += 1
+                dirty_ids.append(old)
             self.slot_owner[slot] = v
             self.device_map[v] = slot
             self.storage[slot] = self.g.features[v]
+            dirty_slots.append(slot)
+            dirty_ids.append(v)
             self._fifo_head = (self._fifo_head + 1) % self.capacity
+        # one version bump per insert batch → mirrors re-sync once
+        self._record_delta(np.asarray(dirty_slots, np.int32),
+                           np.asarray(dirty_ids, np.int64))

@@ -46,14 +46,60 @@ from repro.graph.storage import Graph
 # device-plane gather is issued in bounded row chunks: each distinct padded
 # shape costs one jit trace (expensive in interpret mode), so chunking plus
 # pow2 bucketing of the tail keeps the set of compiled shapes small and
-# independent of the batch-size schedule
-GATHER_CHUNK_ROWS = 2048
+# independent of the batch-size schedule.  4096 covers the paper's batch
+# regime in ONE dispatch — per-chunk dispatch overhead, not gather
+# bandwidth, dominates the device plane's fixed cost
+GATHER_CHUNK_ROWS = 4096
 _MIN_ROWS = 8
 
 
 def _bucket(n: int) -> int:
     """Round ``n`` up to a pow2 (≥ 8) so jit retraces stay bounded."""
     return max(1 << (n - 1).bit_length(), _MIN_ROWS)
+
+
+def _scatter_update(buf, idx, vals):
+    """Dirty-row scatter into a device mirror buffer.  ``idx`` is padded
+    to a pow2 length with out-of-range indices, which ``mode="drop"``
+    discards; the input buffer is donated, so the update is in-place-like
+    and never holds two live copies of the cache table in HBM."""
+    return buf.at[idx].set(vals, mode="drop")
+
+
+_scatter_update_jit = None
+
+
+def _scatter(buf, idx, vals):
+    global _scatter_update_jit
+    if _scatter_update_jit is None:
+        import functools
+        import jax
+        _scatter_update_jit = functools.partial(jax.jit, donate_argnums=(0,))(
+            _scatter_update)
+    return _scatter_update_jit(buf, idx, vals)
+
+
+def _run_fused(enc, neigh_idx, table, aux, use_pallas: bool, interpret: bool):
+    """Bucket the fused gather+aggregate inputs to pow2 row counts (jit
+    retraces stay bounded across the batch-size schedule) and slice the
+    padding back off.  ``enc`` pads with -1 (→ ``aux[0]``, never referenced
+    by a real dst row); neighbor rows pad with -1 (masked)."""
+    import jax.numpy as jnp
+    from repro.kernels.fused_gather_agg.ops import gather_aggregate
+    ns = len(enc)
+    nd, fan = neigh_idx.shape
+    nsp, ndp = _bucket(ns), _bucket(nd)
+    enc_p = np.full(nsp, -1, np.int32)
+    enc_p[:ns] = enc
+    idx_p = np.full((ndp, fan), -1, np.int32)
+    idx_p[:nd] = neigh_idx
+    nap = _bucket(max(len(aux), 1))
+    aux_p = np.zeros((nap, aux.shape[1]), np.float32)
+    aux_p[:len(aux)] = aux
+    h, a = gather_aggregate(jnp.asarray(enc_p), jnp.asarray(idx_p),
+                            jnp.asarray(table), jnp.asarray(aux_p),
+                            use_pallas=use_pallas, interpret=interpret)
+    return np.asarray(h)[:nd], np.asarray(a)[:nd]
 
 
 class FeaturePlane:
@@ -78,6 +124,24 @@ class FeaturePlane:
         if self.cache is not None:
             return self.cache.fetch(ids)
         return self.graph.features[np.asarray(ids, dtype=np.int64)]
+
+    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray):
+        """Fused layer-0 read (``GNNConfig.fused_gather_agg``): resolve the
+        input-hop rows and the masked neighbor mean in one kernel call,
+        returning ``(h_dst (n_dst, F), agg (n_dst, F))`` where ``n_dst =
+        neigh_idx.shape[0]`` (dst ids are the prefix of ``ids``).
+
+        Host backend: fetch through the cache (same accounting as
+        ``fetch`` — stats-exactness is a tested invariant) and run the
+        SAME jitted fused op with an all-sideband encoding, so both
+        backends compute the aggregate from bitwise-identical resolved
+        rows — the cpu/device bit-exactness anchor."""
+        ids = np.asarray(ids, dtype=np.int64)
+        rows = self.fetch(ids)
+        enc = -np.arange(1, len(ids) + 1, dtype=np.int32)
+        table = np.zeros((1, self.graph.feat_dim), np.float32)
+        return _run_fused(enc, neigh_idx, table, rows,
+                          use_pallas=False, interpret=False)
 
     # -- writes (halo fills / streaming updates) -----------------------------
     def subscribe_to(self, store) -> "FeaturePlane":
@@ -148,27 +212,43 @@ class DeviceFeaturePlane(FeaturePlane):
 
     The ``FeatureCache`` object stays the single source of truth for the
     slot assignment, the replacement policy and the hit/miss accounting —
-    this plane mirrors (storage, device_map) to the device and re-uploads
-    whenever ``cache.version`` moves (resize, FIFO insertion, halo fill).
-    Stale device buffers are deleted before the re-upload so a live
-    autotune sweep never holds two cache tables at once.  The static
-    policy is the intended device configuration (read-only table between
-    episodes); FIFO works but re-uploads after every inserting fetch.
+    this plane mirrors (storage, device_map) to the device and keeps the
+    mirror coherent through the cache's dirty-row delta log
+    (``FeatureCache.deltas_since``): a FIFO-inserting fetch or a streamed
+    ``patch_resident`` scatters only the dirty rows into the live buffers
+    (donated, so no second table materializes); a full delete + re-upload
+    happens only on reallocation (``resize``/``_alloc``) or when the
+    bounded log was dropped.  ``use_pallas=None`` resolves to the Pallas
+    gather only when a real accelerator is attached — on CPU hosts the
+    jitted pure-jnp reference path is both the fast AND the faithful
+    choice (interpret-mode Pallas is a debugging vehicle, exercised by
+    the kernel tests, not a production configuration).
     """
 
     backend = "device"
 
     def __init__(self, graph: Graph, cache: Optional[FeatureCache] = None,
-                 use_pallas: bool = True, interpret: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 incremental_sync: bool = True):
         super().__init__(graph, cache)
         import jax
-        self.use_pallas = use_pallas
+        accel = jax.devices()[0].platform in ("tpu", "gpu")
+        self.use_pallas = use_pallas if use_pallas is not None else accel
         # interpret mode unless a real accelerator backs the default device
-        self.interpret = (interpret if interpret is not None else
-                          jax.devices()[0].platform not in ("tpu", "gpu"))
+        self.interpret = interpret if interpret is not None else not accel
+        self.incremental_sync = incremental_sync
         self._dev_table = None
         self._dev_slots = None
         self._version = -1
+        self._epoch = -1
+        # mirror-maintenance counters (the upload-counter test and
+        # benchmarks/fig_gather.py read these): full uploads move
+        # O(capacity) rows, scatters move O(dirty rows)
+        self.sync_full_uploads = 0
+        self.sync_row_scatters = 0
+        self.sync_rows_scattered = 0
+        self.sync_bytes_uploaded = 0    # host→device mirror traffic, exact
         # mode1 batch-gen workers share the plane: the mirror delete +
         # re-upload must never race a gather in another thread (a deleted
         # buffer mid-kernel is fatal, unlike the host path's benign numpy
@@ -181,19 +261,60 @@ class DeviceFeaturePlane(FeaturePlane):
         if self._dev_table is not None and self._version == c.version:
             return
         import jax
-        for buf in (self._dev_table, self._dev_slots):
-            if buf is not None:
-                buf.delete()             # donate the stale buffers
-        self._dev_table = jax.device_put(c.storage)
-        self._dev_slots = jax.device_put(c.device_map)
+        import jax.numpy as jnp
+        deltas = (c.deltas_since(self._version, self._epoch)
+                  if self.incremental_sync and self._dev_table is not None
+                  else None)
+        if deltas is None:
+            # reallocation (or the bounded delta log was dropped): the
+            # buffer shapes may have changed — delete the stale mirror
+            # and re-upload the whole table
+            for buf in (self._dev_table, self._dev_slots):
+                if buf is not None:
+                    buf.delete()
+            self._dev_table = jax.device_put(c.storage)
+            self._dev_slots = jax.device_put(c.device_map)
+            self.sync_full_uploads += 1
+            self.sync_bytes_uploaded += (c.storage.nbytes
+                                         + c.device_map.nbytes)
+        else:
+            dirty_slots, dirty_ids = deltas
+            if len(dirty_slots):
+                # pad to a pow2 with out-of-range indices (dropped by the
+                # scatter) so jit retraces stay bounded
+                p = _bucket(len(dirty_slots))
+                idx = np.full(p, c.capacity, np.int32)
+                idx[:len(dirty_slots)] = dirty_slots
+                vals = np.zeros((p, self.graph.feat_dim), np.float32)
+                vals[:len(dirty_slots)] = c.storage[dirty_slots]
+                self._dev_table = _scatter(self._dev_table,
+                                           jnp.asarray(idx),
+                                           jnp.asarray(vals))
+                self.sync_bytes_uploaded += vals.nbytes + idx.nbytes
+            if len(dirty_ids):
+                p = _bucket(len(dirty_ids))
+                idx = np.full(p, self.graph.num_nodes, np.int64)
+                idx[:len(dirty_ids)] = dirty_ids
+                vals = np.zeros(p, np.int32)
+                vals[:len(dirty_ids)] = c.device_map[dirty_ids]
+                self._dev_slots = _scatter(self._dev_slots,
+                                           jnp.asarray(idx),
+                                           jnp.asarray(vals))
+                self.sync_bytes_uploaded += vals.nbytes + idx.nbytes
+            self.sync_row_scatters += 1
+            self.sync_rows_scattered += len(dirty_slots) + len(dirty_ids)
         self._version = c.version
+        self._epoch = c.epoch
 
     def device_bytes(self) -> int:
-        """HBM footprint of the mirror (cache table + slot map)."""
-        c = self.cache
-        if c is None or not c.capacity:
-            return 0
-        return c.storage.nbytes + c.device_map.nbytes
+        """HBM footprint of the mirror — what is ACTUALLY resident on
+        device: 0 before the first upload and after the buffers were
+        deleted (the host-side ``c.storage`` numpy array is not HBM)."""
+        total = 0
+        for buf in (self._dev_table, self._dev_slots):
+            if buf is not None and not buf.is_deleted():
+                total += buf.nbytes
+        return total
 
     # -- reads ---------------------------------------------------------------
     def fetch(self, ids: np.ndarray) -> np.ndarray:
@@ -211,27 +332,65 @@ class DeviceFeaturePlane(FeaturePlane):
         self._ensure_synced()
         n = len(ids)
         out = np.empty((n, self.graph.feat_dim), np.float32)
-        miss = np.empty(n, dtype=bool)
+        # the host-side device_map is bit-identical to the synced _dev_slots
+        # mirror (both under this lock), so the miss set is known BEFORE the
+        # device gather completes — that is what lets the host-store gather
+        # for misses overlap the device gather of resident rows.  The slot
+        # translation rides the SAME read (one map lookup, two uses): the
+        # kernel receives the slots directly instead of re-deriving them
+        # from the _dev_slots mirror with a device-side take per chunk
+        slots_np = c.device_map[ids]
+        miss = slots_np < 0
+        pending = []                     # (offset, rows_on_device) per chunk
         for a in range(0, n, GATHER_CHUNK_ROWS):
-            chunk = ids[a:a + GATHER_CHUNK_ROWS]
-            m = len(chunk)
+            m = len(slots_np[a:a + GATHER_CHUNK_ROWS])
             mp = min(_bucket(m), GATHER_CHUNK_ROWS)
-            # out-of-range pad ids resolve to slot -1 (a miss) on device
-            pad = np.full(mp, self.graph.num_nodes, dtype=np.int64)
-            pad[:m] = chunk
-            slots = jnp.take(self._dev_slots, jnp.asarray(pad),
-                             mode="fill", fill_value=-1)
-            rows, miss_c = cache_gather(slots, self._dev_table,
-                                        use_pallas=self.use_pallas,
-                                        interpret=self.interpret)
-            out[a:a + m] = np.asarray(rows)[:m]
-            miss[a:a + m] = np.asarray(miss_c)[:m].astype(bool)
+            # pad slots resolve to -1 (a miss) — zero rows, sliced off below
+            pad = np.full(mp, -1, dtype=np.int32)
+            pad[:m] = slots_np[a:a + m]
+            rows, _ = cache_gather(jnp.asarray(pad), self._dev_table,
+                                   use_pallas=self.use_pallas,
+                                   interpret=self.interpret)
+            # jax dispatch is async: don't block on the result yet
+            pending.append((a, m, rows))
+        # double-buffered miss path: gather missed rows from the host
+        # store while the device works through the resident-row gathers
         miss_ids = ids[miss]
+        host_rows = self.graph.features[miss_ids] if len(miss_ids) else None
+        for a, m, rows in pending:
+            out[a:a + m] = np.asarray(rows)[:m]      # blocks per chunk
         if len(miss_ids):
-            out[miss] = self.graph.features[miss_ids]
+            out[miss] = host_rows
         # one accounting implementation for both planes (stats-exactness
         # is a tested invariant); a FIFO insert bumps version → re-sync
         c.account_fetch(~miss, miss_ids)
+        return out
+
+    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray):
+        """Fused layer-0 read against the device mirror: resident rows are
+        addressed by cache slot (no batch feature tensor materializes on
+        the kernel path), misses ride the host-gathered ``aux`` sideband.
+        Bit-exact with the host plane: both resolve the same row values,
+        then run the same aggregation."""
+        ids = np.asarray(ids, dtype=np.int64)
+        c = self.cache
+        if c is None or not c.capacity:
+            return super().gather_aggregate(ids, neigh_idx)
+        with self._lock:
+            self._ensure_synced()
+            slots = c.device_map[ids]
+            hit = slots >= 0
+            miss_ids = ids[~hit]
+            enc = np.empty(len(ids), np.int32)
+            enc[hit] = slots[hit]
+            enc[~hit] = -np.arange(1, len(miss_ids) + 1, dtype=np.int32)
+            aux = (self.graph.features[miss_ids] if len(miss_ids)
+                   else np.zeros((0, self.graph.feat_dim), np.float32))
+            out = _run_fused(enc, neigh_idx, self._dev_table, aux,
+                             use_pallas=self.use_pallas,
+                             interpret=self.interpret)
+            # same accounting seam as _fetch_locked (stats-exact invariant)
+            c.account_fetch(hit, miss_ids)
         return out
 
     def fill_rows(self, ids: np.ndarray, rows: np.ndarray):

@@ -56,7 +56,7 @@ from repro.graph.partition import PartitionPlan, plan_partitions
 from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.launch.mesh import make_partition_mesh
 from repro.models.gnn import (decls_gnn, make_apply_fn, make_eval_fn,
-                              make_grad_fn)
+                              make_grad_fn, make_grad_fn_fused)
 from repro.models.params import init_params, param_bytes
 from repro.train.checkpoint import CheckpointManager, TrainerCheckpointMixin
 from repro.train.fault_tolerance import SupervisorReport, TrainSupervisor
@@ -231,6 +231,8 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.opt = make_adamw()
         self.opt_state = self.opt.init(self.params)
         self._grad = make_grad_fn(cfg)
+        self._grad_fused = (make_grad_fn_fused(cfg)
+                            if cfg.model == "graphsage" else None)
         self._apply = make_apply_fn(cfg, self.opt)
         self._eval = make_eval_fn(cfg)
         self.slots = [self._make_slot(p, sub) for p, sub in
@@ -331,8 +333,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
 
     def _make_slot(self, p: int, sub: Graph) -> PartitionSlot:
         cfg = self.cfg
-        cache = (FeatureCache(sub, cfg.cache_volume_mb, cfg.cache_policy,
-                              self.seed + p)
+        cache = (FeatureCache(sub, cfg.cache_volume_mb, cfg.cache_policy)
                  if cfg.cache_volume_mb > 0 else None)
         weight_fn = (bias_weight_fn(cache, cfg.bias_rate)
                      if (cache is not None and cfg.bias_rate > 1.0) else None)
@@ -356,9 +357,15 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
             hs.inputs += len(mb.input_ids)
             hs.batches += 1
             arrays = batch_device_arrays(mb)
-            grads, loss, acc = self._grad(self.params, arrays["features"],
-                                          arrays["neigh_idxs"],
-                                          arrays["labels"])
+            if "agg0" in arrays:               # fused layer-0 batch path
+                grads, loss, acc = self._grad_fused(
+                    self.params, arrays["h_dst0"], arrays["agg0"],
+                    arrays["neigh_idxs"], arrays["labels"])
+            else:
+                grads, loss, acc = self._grad(self.params,
+                                              arrays["features"],
+                                              arrays["neigh_idxs"],
+                                              arrays["labels"])
             slot.pending_grads = grads
             return float(loss), float(acc)
         return fn
@@ -603,8 +610,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
                     slot.cache = None
                 elif slot.cache is None:
                     slot.cache = FeatureCache(slot.graph, vol,
-                                              self.cfg.cache_policy,
-                                              self.seed + slot.index)
+                                              self.cfg.cache_policy)
                 else:
                     slot.cache.resize(vol)
             if "cache_volume_mb" in updates or "bias_rate" in updates:

@@ -100,7 +100,8 @@ class _SampleWorker(threading.Thread):
                 mb = self.sampler.sample(seeds)
                 t1 = time.perf_counter()
                 if self.do_batchgen:
-                    mb = generate_batch(mb, self.pipe.plane, self.pipe.graph)
+                    mb = generate_batch(mb, self.pipe.plane, self.pipe.graph,
+                                        fused=self.pipe.fused)
                 t2 = time.perf_counter()
                 with self.pipe._lock:
                     self.pipe.stats.t_sample += t1 - t0
@@ -133,6 +134,10 @@ class Pipeline:
         self.weight_fn = weight_fn
         self.seed = seed
         self.mode = cfg.parallel_mode
+        # fused layer-0 batch generation (GraphSAGE only; other models
+        # keep the unfused feature-tensor path)
+        self.fused = (getattr(cfg, "fused_gather_agg", False)
+                      and getattr(cfg, "model", "") == "graphsage")
         self.workers_n = max(cfg.workers, 1)
         self.batch_size = cfg.batch_size
         self.stats = PipelineStats()
@@ -232,7 +237,8 @@ class Pipeline:
             t0 = time.perf_counter()
             mb = self._seq_sampler.sample(seeds)
             t1 = time.perf_counter()
-            mb = generate_batch(mb, self.plane, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph,
+                                fused=self.fused)
             t2 = time.perf_counter()
             loss, acc = self.train_fn(mb)
             t3 = time.perf_counter()
@@ -255,13 +261,15 @@ class Pipeline:
                 self._spare = self._make_sampler(997)  # straggler/failure spare
             t0 = time.perf_counter()
             mb = self._spare.sample(seeds)
-            mb = generate_batch(mb, self.plane, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph,
+                                fused=self.fused)
             with self._lock:
                 self.stats.reissued += 1
                 self.stats.t_sample += time.perf_counter() - t0
         elif not do_batchgen:                          # mode2: serialize batchgen
             t0 = time.perf_counter()
-            mb = generate_batch(mb, self.plane, self.graph)
+            mb = generate_batch(mb, self.plane, self.graph,
+                                fused=self.fused)
             with self._lock:
                 self.stats.t_batch += time.perf_counter() - t0
         t0 = time.perf_counter()

@@ -71,6 +71,11 @@ class MiniBatch:
     seeds: np.ndarray            # (batch,)
     labels: np.ndarray           # (batch,)
     features: Optional[np.ndarray] = None   # filled by batch generation
+    # fused batch generation (GNNConfig.fused_gather_agg): layer-0
+    # pre-aggregates instead of the (n_src0, F) feature tensor —
+    # dst-prefix rows and the masked neighbor mean, both (n_dst0, F)
+    fused_h_dst: Optional[np.ndarray] = None
+    fused_agg: Optional[np.ndarray] = None
 
     def num_input_nodes(self) -> int:
         return len(self.input_ids)

@@ -23,11 +23,21 @@ if TYPE_CHECKING:  # typing-only: the graph layer stays jax-free at runtime
 
 def generate_batch(mb: MiniBatch,
                    plane: Optional[Union["FeaturePlane", FeatureCache]],
-                   graph) -> MiniBatch:
+                   graph, fused: bool = False) -> MiniBatch:
     """Fill ``mb.features`` for the input hop (dedup already done by the
     sampler's np.unique reindexing).  ``plane`` is a ``FeaturePlane`` (the
     hot path) or, for back-compat, a bare ``FeatureCache``; ``None`` reads
-    the host store directly (evaluation paths)."""
+    the host store directly (evaluation paths).
+
+    ``fused=True`` (``GNNConfig.fused_gather_agg``, GraphSAGE layer 0)
+    routes through ``FeaturePlane.gather_aggregate`` instead: the batch
+    carries the layer-0 pre-aggregates (``fused_h_dst``, ``fused_agg``)
+    and ``features`` stays ``None`` — the input-hop tensor never
+    materializes."""
+    if fused and plane is not None and mb.blocks:
+        h_dst, agg = plane.gather_aggregate(mb.input_ids,
+                                            mb.blocks[0].neigh_idx)
+        return dataclasses.replace(mb, fused_h_dst=h_dst, fused_agg=agg)
     if plane is not None:
         feats = plane.fetch(mb.input_ids)
     else:
@@ -47,26 +57,36 @@ def batch_device_arrays(mb: MiniBatch):
     src_ids, so one pad size per node level).  Padded neighbor rows are -1
     (masked out); padded feature rows are zero.  The final level (seeds) is
     left at the exact batch size, which is constant across steps."""
-    feats = mb.features
     n_levels = len(mb.blocks) + 1
     # level sizes: [n_src_hop0, n_dst_hop0 == n_src_hop1, ..., n_seeds]
     sizes = [len(mb.blocks[0].src_ids)] + [len(b.dst_ids) for b in mb.blocks]
     pads = [_pow2(s) for s in sizes]
     pads[-1] = sizes[-1]                        # seeds: exact batch size
-    fpad = np.zeros((pads[0], feats.shape[1]), feats.dtype)
-    fpad[:sizes[0]] = feats
     neigh_idxs = []
     for i, blk in enumerate(mb.blocks):
         pad_dst = pads[i + 1]
         m = -np.ones((pad_dst, blk.neigh_idx.shape[1]), np.int32)
         m[:blk.neigh_idx.shape[0]] = blk.neigh_idx
         neigh_idxs.append(m)
-    return {
-        "features": fpad,
+    out = {
         "neigh_idxs": neigh_idxs,
         "labels": mb.labels.astype(np.int32),
         "sizes": sizes,
     }
+    if mb.fused_agg is not None:
+        # fused batch generation: layer-0 pre-aggregates replace the
+        # input-hop feature tensor; both pad to the DST level of hop 0
+        # (zero rows — they never reach the loss, which slices to seeds)
+        for key, arr in (("h_dst0", mb.fused_h_dst), ("agg0", mb.fused_agg)):
+            pad = np.zeros((pads[1], arr.shape[1]), np.float32)
+            pad[:sizes[1]] = arr
+            out[key] = pad
+        return out
+    feats = mb.features
+    fpad = np.zeros((pads[0], feats.shape[1]), feats.dtype)
+    fpad[:sizes[0]] = feats
+    out["features"] = fpad
+    return out
 
 
 def inference_arrays(mb: MiniBatch):
@@ -83,6 +103,8 @@ def inference_arrays(mb: MiniBatch):
 def batch_bytes(mb: MiniBatch) -> int:
     """B term of Eq. (3): bytes of the generated mini-batch."""
     total = mb.features.nbytes if mb.features is not None else 0
+    if mb.fused_agg is not None:
+        total += mb.fused_agg.nbytes + mb.fused_h_dst.nbytes
     for blk in mb.blocks:
         total += blk.neigh_idx.nbytes + blk.src_ids.nbytes + blk.dst_ids.nbytes
     return total + mb.labels.nbytes

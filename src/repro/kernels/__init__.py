@@ -6,5 +6,7 @@ Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
   reservoir/        vectorized weighted-reservoir top-m neighbor selection
   gather/           device-map feature-cache row gather
   segment_agg/      masked neighbor mean aggregation (GraphSAGE SpMM analogue)
+  fused_gather_agg/ gather + layer-0 neighbor mean in one pass (no
+                    materialized batch feature tensor on the hit path)
   flash_attention/  blockwise fused attention fwd (LM stack hot-spot)
 """

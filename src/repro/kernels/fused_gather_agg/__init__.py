@@ -1,0 +1,1 @@
+from repro.kernels.fused_gather_agg.ops import gather_aggregate  # noqa: F401

@@ -1,0 +1,53 @@
+"""jit wrapper: pad ids/dst rows to the id block (and F to the feature
+block), dispatch kernel/ref.
+
+Contract (shared with ref.py, regression-tested in tests/test_fused_agg.py):
+``enc (Ns,) int32`` encodes where each input id's feature row lives —
+``enc[i] >= 0`` is a cache-table slot, ``enc[i] < 0`` is row ``-enc[i]-1``
+of the ``aux`` sideband (host-gathered misses; must have ≥ 1 row).
+``neigh_idx (Nd, fanout)`` indexes the input ids (−1 = pad), the dst ids
+being the prefix of the input ids (``Nd ≤ Ns``).  Returns
+``(h_dst (Nd, F), agg (Nd, F))`` — the self rows and the masked neighbor
+mean — without ever materializing the (Ns, F) batch tensor on the kernel
+path.  Padded dst rows are sliced away; padded enc entries resolve to
+``aux[0]`` and are never referenced by a real dst row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_gather_agg.kernel import gather_aggregate_pallas
+from repro.kernels.fused_gather_agg.ref import gather_aggregate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_aggregate(enc, neigh_idx, cache, aux, use_pallas: bool = True,
+                     interpret: bool = True):
+    Nd, fanout = neigh_idx.shape
+    Ns = enc.shape[0]
+    C, F = cache.shape
+    ndp = -(-Nd // 8) * 8
+    nsp = max(-(-Ns // 8) * 8, ndp)
+    enc_p = jnp.pad(enc.astype(jnp.int32), (0, nsp - Ns),
+                    constant_values=-1)
+    idx_p = jnp.pad(neigh_idx.astype(jnp.int32), ((0, ndp - Nd), (0, 0)),
+                    constant_values=-1)
+    if use_pallas:
+        # feature blocking: full-width when one block suffices, else a
+        # lane-aligned block size that divides the (padded) width
+        if F <= 512:
+            block_f, fp = F, F
+        else:
+            block_f = 512 if F % 512 == 0 else 128
+            fp = -(-F // block_f) * block_f
+        cache_p = cache if fp == F else jnp.pad(cache, ((0, 0), (0, fp - F)))
+        aux_p = aux if fp == F else jnp.pad(aux, ((0, 0), (0, fp - F)))
+        h, a = gather_aggregate_pallas(enc_p, idx_p, cache_p, aux_p,
+                                       block_f=block_f, interpret=interpret)
+        h, a = h[:, :F], a[:, :F]
+    else:
+        h, a = gather_aggregate_ref(enc_p, idx_p, cache, aux)
+    return h[:Nd].astype(cache.dtype), a[:Nd].astype(cache.dtype)

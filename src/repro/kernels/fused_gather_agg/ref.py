@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused gather + aggregate (and the XLA fast
+path on CPU hosts): resolve encoded slots against (cache, aux), take the
+dst prefix, and reuse the segment-agg oracle for the masked mean."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg.ref import neighbor_mean_ref
+
+
+def gather_aggregate_ref(enc, neigh_idx, cache, aux):
+    hit = enc >= 0
+    rows = jnp.where(hit[:, None],
+                     cache[jnp.maximum(enc, 0)],
+                     aux[jnp.maximum(-enc - 1, 0)])
+    h_dst = rows[:neigh_idx.shape[0]]
+    return h_dst, neighbor_mean_ref(neigh_idx, rows)

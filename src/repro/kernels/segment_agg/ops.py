@@ -18,7 +18,7 @@ def neighbor_mean(neigh_idx, h_src, use_pallas: bool = True,
     idx_p = jnp.pad(neigh_idx.astype(jnp.int32), ((0, ndp - Nd), (0, 0)),
                     constant_values=-1)
     if use_pallas:
-        out = neighbor_mean_pallas(idx_p, h_src)
+        out = neighbor_mean_pallas(idx_p, h_src, interpret=interpret)
     else:
         out = neighbor_mean_ref(idx_p, h_src)
     return out[:Nd]

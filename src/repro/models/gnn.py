@@ -15,8 +15,6 @@ import jax.numpy as jnp
 
 from repro.models.params import decl
 
-_KERNEL_AGG = {"enabled": False}  # flipped by kernels/segment_agg/ops.py users
-
 
 def layer_dims(cfg) -> List[Tuple[int, int]]:
     dims = [cfg.feat_dim] + [cfg.hidden] * (cfg.num_layers - 1) + [cfg.num_classes]
@@ -106,8 +104,39 @@ def gnn_forward(params, features, neigh_idxs: List[jnp.ndarray], cfg):
     return h                                              # (pad_seeds, classes)
 
 
+def gnn_forward_fused(params, h_dst0, agg0, neigh_idxs, cfg):
+    """Forward pass whose layer-0 inputs were produced by the fused
+    gather+aggregate kernel (kernels/fused_gather_agg): the batch-gen
+    stage hands over ``h_dst0`` (the dst-prefix feature rows) and ``agg0``
+    (the masked neighbor mean), both (pad_dst0, F) — the (pad_src0, F)
+    input-feature tensor never materializes.  Only GraphSAGE layer 0 is
+    expressible as (self, mean) pre-aggregates; layers 1+ run the normal
+    per-hop path over ``neigh_idxs[1:]``."""
+    assert cfg.model == "graphsage", "fused layer 0 is GraphSAGE-only"
+    dt = jnp.dtype(cfg.compute_dtype)
+    n = len(params["layers"])
+    p0 = params["layers"][0]
+    h = (h_dst0.astype(dt) @ p0["w_self"] + agg0.astype(dt) @ p0["w_neigh"]
+         + p0["b"])
+    h = jax.nn.relu(h) if n > 1 else h
+    for i, (p, idx) in enumerate(zip(params["layers"][1:], neigh_idxs[1:]),
+                                 start=1):
+        h = sage_layer(p, h, idx, act=(i < n - 1))
+    return h
+
+
 def gnn_loss(params, features, neigh_idxs, labels, cfg):
     logits = gnn_forward(params, features, neigh_idxs, cfg)
+    logits = logits[:labels.shape[0]].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def gnn_loss_fused(params, h_dst0, agg0, neigh_idxs, labels, cfg):
+    logits = gnn_forward_fused(params, h_dst0, agg0, neigh_idxs, cfg)
     logits = logits[:labels.shape[0]].astype(jnp.float32)
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
@@ -131,6 +160,24 @@ def make_train_step(cfg, opt):
     return step
 
 
+def make_train_step_fused(cfg, opt):
+    """Fused-layer-0 twin of ``make_train_step``: consumes the
+    (h_dst0, agg0) pair from the fused gather+aggregate batch path."""
+
+    @jax.jit
+    def step(params, opt_state, h_dst0, agg0, neigh_idxs, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: gnn_loss_fused(p, h_dst0, agg0, neigh_idxs, labels,
+                                     cfg),
+            has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params, cfg.lr)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                              updates)
+        return params, opt_state, loss, acc
+
+    return step
+
+
 def make_grad_fn(cfg):
     """jit-able gradient step WITHOUT the optimizer update — the
     multi-partition path (core/multipart.py) averages gradients across
@@ -140,6 +187,20 @@ def make_grad_fn(cfg):
     def gfn(params, features, neigh_idxs, labels):
         (loss, acc), grads = jax.value_and_grad(
             lambda p: gnn_loss(p, features, neigh_idxs, labels, cfg),
+            has_aux=True)(params)
+        return grads, loss, acc
+
+    return gfn
+
+
+def make_grad_fn_fused(cfg):
+    """Fused-layer-0 twin of ``make_grad_fn`` (multi-partition path)."""
+
+    @jax.jit
+    def gfn(params, h_dst0, agg0, neigh_idxs, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: gnn_loss_fused(p, h_dst0, agg0, neigh_idxs, labels,
+                                     cfg),
             has_aux=True)(params)
         return grads, loss, acc
 

@@ -10,17 +10,19 @@ fairness) lands in one place and both engines inherit it.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
-def admit_pending(pending: List, running: Dict,
+def admit_pending(pending: Deque, running: Dict,
                   try_allocate: Callable[[object], Optional[int]],
                   on_admit: Optional[Callable[[object, int], None]] = None
                   ) -> int:
     """Admit queued requests into free slots, in FIFO order.
 
+    ``pending`` is a ``collections.deque`` (both engines'), so the
+    head-pop per admission is O(1) instead of the O(n) list shuffle.
     ``try_allocate(req)`` returns a slot index or ``None`` (no capacity —
     or a request the pool cannot ever hold, which then blocks the head of
     the line exactly like the pre-seam engines did).  ``on_admit(req,
@@ -33,7 +35,7 @@ def admit_pending(pending: List, running: Dict,
         slot = try_allocate(req)
         if slot is None:
             break
-        pending.pop(0)
+        pending.popleft()
         if on_admit is not None:
             on_admit(req, slot)
         running[slot] = req

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List
+from collections import deque
+from typing import Deque, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +62,7 @@ class Engine:
         self.kv = KVCacheManager(caches, batch, max_len)
         self._decode = jax.jit(self.model.decode)
         self._rng = np.random.default_rng(seed)
-        self.pending: List[Request] = []
+        self.pending: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}   # slot -> request
         # retained history is BOUNDED, same policy as the GNN engine (an
         # online engine must not grow per-request state forever)

@@ -32,7 +32,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -81,14 +82,14 @@ class GNNInferenceEngine:
                                        weight_fn=weight_fn, seed=seed)
         self._fwd = jax.jit(
             lambda p, feats, idxs: gnn_forward(p, feats, idxs, cfg))
-        self.pending: List[GNNRequest] = []
+        self.pending: Deque[GNNRequest] = deque()
         self.running: Dict[int, GNNRequest] = {}   # slot -> request
         # retained result history is BOUNDED (an online engine must not
         # grow per-query state forever); oldest entries are dropped
         self.keep_completed = max(int(keep_completed), 1)
         self.completed: List[GNNRequest] = []
         self.total_completed = 0
-        self._free = list(range(batch))
+        self._free = deque(range(batch))
         # seeds must be UNIQUE (the sampler's dedup/reindex invariant),
         # so in-flight queries are distinct nodes — a pool larger than
         # the graph could never fill
@@ -130,7 +131,7 @@ class GNNInferenceEngine:
             # unique, so the FIFO head waits one engine iteration (the
             # in-flight twin retires at the end of this step)
             return None
-        return self._free.pop(0)
+        return self._free.popleft()
 
     def free_slots(self) -> List[int]:
         return sorted(self._free)

@@ -46,7 +46,7 @@ def test_fifo_inserts_and_evicts(smoke_graph):
 @given(vol=st.floats(0.001, 0.2), seed=st.integers(0, 100))
 @settings(max_examples=15, deadline=None)
 def test_device_map_invariant(smoke_graph, vol, seed):
-    c = FeatureCache(smoke_graph, volume_mb=vol, policy="fifo", seed=seed)
+    c = FeatureCache(smoke_graph, volume_mb=vol, policy="fifo")
     rng = np.random.default_rng(seed)
     c.fetch(rng.integers(0, smoke_graph.num_nodes, 300))
     cached = np.where(c.device_map >= 0)[0]

@@ -266,3 +266,114 @@ def test_autotune_live_swaps_sampling_device(smoke_graph, smoke_gnn_cfg):
     assert all(ep.steps == 3 for ep in rep.episodes)  # no dropped batches
     assert tr.cfg.sampling_device == rep.best.config["sampling_device"]
     assert ctrl.pipe.sampling_device == rep.best.config["sampling_device"]
+
+
+# ---------------------------------------------------------------------------
+# incremental mirror sync: O(dirty rows), not O(capacity)
+# ---------------------------------------------------------------------------
+
+def test_incremental_sync_parity_and_upload_counters(smoke_graph):
+    """Interleaved FIFO inserts + streamed update_rows keep the mirror
+    coherent through row-wise scatters: bit-exact and stats-exact with the
+    host plane AND with a full-reupload device plane, while full uploads
+    happen exactly once (the initial upload) and the scattered-row volume
+    stays O(dirty rows) — the whole-mirror re-upload pathology is gone."""
+    from repro.graph.storage import FeatureStore
+    host = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.2, "fifo"))
+    dev = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.2, "fifo"))
+    full = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.2, "fifo"),
+                              incremental_sync=False)
+    store = FeatureStore(smoke_graph)
+    for p in (host, dev, full):
+        p.subscribe_to(store)
+    rng = np.random.default_rng(3)
+    saved = smoke_graph.features.copy()
+    try:
+        dirty_budget = 0
+        for step in range(12):
+            ids = rng.integers(0, smoke_graph.num_nodes, 48)
+            a, b, c = host.fetch(ids), dev.fetch(ids), full.fetch(ids)
+            assert np.array_equal(a, b) and np.array_equal(a, c)
+            dirty_budget += 3 * 48          # slots + evicted + inserted ids
+            if step % 3 == 1:               # interleave streamed updates
+                resident = np.where(dev.cache.device_map >= 0)[0][:4]
+                rows = rng.normal(0, 1, (len(resident),
+                                         smoke_graph.feat_dim)).astype(np.float32)
+                store.update_rows(resident, rows)
+                dirty_budget += len(resident)
+                for p in (host, dev, full):
+                    np.testing.assert_array_equal(p.fetch(resident), rows)
+        assert _stats_tuple(host.cache) == _stats_tuple(dev.cache)
+        assert _stats_tuple(host.cache) == _stats_tuple(full.cache)
+        # THE upload-counter assertion: only the initial mirror upload was
+        # a full table move; every version bump after it was a scatter
+        assert dev.sync_full_uploads == 1
+        assert dev.sync_row_scatters > 0
+        assert dev.sync_rows_scattered <= dirty_budget          # O(dirty)
+        assert dev.sync_rows_scattered < \
+            dev.sync_row_scatters * dev.cache.capacity          # not O(cap)
+        # the incremental-off twin re-uploaded the whole table every bump
+        assert full.sync_full_uploads > 1 and full.sync_row_scatters == 0
+        # ... and moved strictly more host→device bytes for the same stream
+        assert dev.sync_bytes_uploaded < full.sync_bytes_uploaded
+    finally:
+        smoke_graph.features[:] = saved      # session-scoped fixture
+        for p in (host, dev, full):
+            p.detach_store()
+
+
+def test_full_reupload_only_on_realloc(smoke_graph):
+    """resize/realloc is the ONLY event that re-uploads the full table;
+    FIFO-inserting fetches and patch_resident calls scatter rows."""
+    dev = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.2, "fifo"))
+    rng = np.random.default_rng(4)
+    dev.fetch(rng.integers(0, smoke_graph.num_nodes, 64))
+    assert dev.sync_full_uploads == 1        # the initial upload
+    dev.fetch(rng.integers(0, smoke_graph.num_nodes, 64))
+    assert dev.sync_full_uploads == 1        # FIFO insert → scatter only
+    assert dev.sync_row_scatters >= 1
+    resident = np.where(dev.cache.device_map >= 0)[0][:3]
+    dev.fill_rows(resident, np.zeros((3, smoke_graph.feat_dim), np.float32))
+    dev.fetch(resident)
+    assert dev.sync_full_uploads == 1        # patch → scatter only
+    dev.resize(0.1)
+    dev.fetch(resident)
+    assert dev.sync_full_uploads == 2        # realloc → full re-upload
+
+
+def test_incremental_sync_falls_back_when_log_overflows(smoke_graph):
+    """More dirty rows than the table holds → replay costs more than a
+    full upload; the bounded delta log drops and the mirror re-uploads."""
+    dev = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.01, "fifo"))
+    rng = np.random.default_rng(5)
+    cap = dev.cache.capacity
+    dev.fetch(rng.integers(0, smoke_graph.num_nodes, 8))      # initial upload
+    # one fetch inserting far more unique ids than capacity
+    big = rng.permutation(smoke_graph.num_nodes)[:4 * cap]
+    host = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.01, "fifo"))
+    host.fetch(rng.integers(0, smoke_graph.num_nodes, 8))
+    assert np.array_equal(host.fetch(big), dev.fetch(big))
+    # the oversized insert dropped the log; the NEXT sync (triggered by
+    # the version bump the insert left behind) must be a full upload
+    probe = np.arange(8)
+    assert np.array_equal(host.fetch(probe), dev.fetch(probe))
+    assert dev.sync_full_uploads == 2        # overflow → full, not scatter
+    assert _stats_tuple(host.cache) == _stats_tuple(dev.cache)
+
+
+def test_device_bytes_reports_resident_buffers(smoke_graph):
+    """device_bytes is the ACTUAL HBM footprint: 0 before the first
+    upload, table+slot-map bytes while resident, 0 again after delete."""
+    dev = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05))
+    assert dev.device_bytes() == 0           # nothing uploaded yet
+    dev.fetch(np.arange(32))
+    expect = dev.cache.storage.nbytes + dev.cache.device_map.nbytes
+    assert dev.device_bytes() == expect
+    for buf in (dev._dev_table, dev._dev_slots):
+        buf.delete()
+    assert dev.device_bytes() == 0           # deleted buffers don't count
+    # cacheless / zero-capacity planes have no mirror at all
+    assert DeviceFeaturePlane(smoke_graph, None).device_bytes() == 0
+    tiny = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.0))
+    tiny.fetch(np.arange(8))
+    assert tiny.device_bytes() == 0

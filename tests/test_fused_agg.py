@@ -1,0 +1,206 @@
+"""Fused gather+aggregate kernel (kernels/fused_gather_agg) and its wiring:
+oracle parity in interpret mode, plane-level host/device bit-exactness with
+identical accounting, and end-to-end training parity with the fused flag on
+and off — single- and multi-partition."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.a3gnn import A3GNNTrainer
+from repro.core.cache import FeatureCache
+from repro.core.feature_plane import DeviceFeaturePlane, HostFeaturePlane
+from repro.kernels.fused_gather_agg.ops import gather_aggregate
+
+RNG = np.random.default_rng(7)
+
+
+def _case(Ns, Nd, fan, C, Na, F):
+    cache = jnp.asarray(RNG.normal(0, 1, (C, F)), jnp.float32)
+    aux = jnp.asarray(RNG.normal(0, 1, (Na, F)), jnp.float32)
+    enc = np.where(RNG.random(Ns) < 0.6,
+                   RNG.integers(0, C, Ns),
+                   -RNG.integers(1, Na + 1, Ns)).astype(np.int32)
+    idx = RNG.integers(-1, Ns, (Nd, fan)).astype(np.int32)
+    return jnp.asarray(enc), jnp.asarray(idx), cache, aux
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Ns,Nd,fan,C,Na,F",
+                         [(32, 16, 5, 24, 8, 256), (37, 11, 3, 16, 5, 128),
+                          (9, 9, 4, 8, 3, 602), (64, 40, 7, 50, 20, 300)])
+def test_fused_matches_ref(Ns, Nd, fan, C, Na, F):
+    enc, idx, cache, aux = _case(Ns, Nd, fan, C, Na, F)
+    h1, a1 = gather_aggregate(enc, idx, cache, aux, use_pallas=True,
+                              interpret=True)
+    h2, a2 = gather_aggregate(enc, idx, cache, aux, use_pallas=False)
+    for h, a in ((h1, a1), (h2, a2)):
+        assert h.shape == a.shape == (Nd, F)
+        assert h.dtype == a.dtype == cache.dtype
+    # the self rows are pure copies — bit-exact across backends
+    assert np.array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_fused_matches_unfused_composition():
+    """The fused op == cache_gather∘neighbor_mean on the materialized
+    resolved rows (the tensor the fusion avoids)."""
+    enc, idx, cache, aux = _case(40, 24, 5, 32, 10, 256)
+    h, a = gather_aggregate(enc, idx, cache, aux, use_pallas=False)
+    enc_np = np.asarray(enc)
+    rows = np.where(enc_np[:, None] >= 0,
+                    np.asarray(cache)[np.maximum(enc_np, 0)],
+                    np.asarray(aux)[np.maximum(-enc_np - 1, 0)])
+    assert np.array_equal(np.asarray(h), rows[:24])
+    mask = np.asarray(idx) >= 0
+    ref = ((rows[np.maximum(np.asarray(idx), 0)] * mask[..., None]).sum(1)
+           / np.maximum(mask.sum(1, keepdims=True), 1))
+    np.testing.assert_allclose(np.asarray(a), ref, atol=1e-5, rtol=1e-5)
+
+
+def test_fused_all_padded_neighbors():
+    enc, _, cache, aux = _case(16, 1, 1, 8, 4, 128)
+    idx = jnp.full((4, 5), -1, jnp.int32)
+    for up in (True, False):
+        h, a = gather_aggregate(enc, idx, cache, aux, use_pallas=up,
+                                interpret=True)
+        assert np.asarray(a).sum() == 0.0            # empty mean is zero
+        assert np.asarray(h).shape == (4, 128)
+
+
+# ---------------------------------------------------------------------------
+# plane seam: host/device bit-exactness + identical accounting
+# ---------------------------------------------------------------------------
+
+def _stats_tuple(c):
+    s = c.stats
+    return (s.hits, s.misses, s.evictions, s.bytes_from_cache,
+            s.bytes_from_host)
+
+
+@pytest.mark.parametrize("policy", ["static", "fifo"])
+def test_plane_gather_aggregate_parity(smoke_graph, policy):
+    host = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05,
+                                                      policy))
+    dev = DeviceFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05,
+                                                       policy))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        ids = np.unique(rng.integers(0, smoke_graph.num_nodes, 96))
+        n_dst = len(ids) // 2
+        idx = rng.integers(-1, len(ids), (n_dst, 5)).astype(np.int32)
+        hh, ha = host.gather_aggregate(ids, idx)
+        dh, da = dev.gather_aggregate(ids, idx)
+        assert np.array_equal(hh, dh)                 # bit-exact self rows
+        assert np.array_equal(ha, da)                 # bit-exact aggregate
+        np.testing.assert_array_equal(hh, smoke_graph.features[ids[:n_dst]])
+    assert _stats_tuple(host.cache) == _stats_tuple(dev.cache)
+
+
+def test_plane_gather_aggregate_accounting_matches_fetch(smoke_graph):
+    """The fused read accounts exactly like the unfused fetch of the same
+    ids — the stats stream (throughput model, bias feedback) must not
+    notice the flag."""
+    a = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05, "fifo"))
+    b = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05, "fifo"))
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        ids = np.unique(rng.integers(0, smoke_graph.num_nodes, 64))
+        idx = rng.integers(-1, len(ids), (len(ids) // 2, 4)).astype(np.int32)
+        a.fetch(ids)
+        b.gather_aggregate(ids, idx)
+        assert _stats_tuple(a.cache) == _stats_tuple(b.cache)
+
+
+def test_plane_gather_aggregate_cacheless(smoke_graph):
+    for plane in (HostFeaturePlane(smoke_graph, None),
+                  DeviceFeaturePlane(smoke_graph, None)):
+        ids = np.arange(24)
+        idx = np.array([[0, 1, -1], [2, 2, 3]], np.int32)
+        h, agg = plane.gather_aggregate(ids, idx)
+        np.testing.assert_array_equal(h, smoke_graph.features[:2])
+        want0 = smoke_graph.features[[0, 1]].mean(0)
+        np.testing.assert_allclose(agg[0], want0, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: training with the flag on/off, cpu/device, 1 and 2 partitions
+# ---------------------------------------------------------------------------
+
+def _params_vec(params):
+    import jax
+    return np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree_util.tree_leaves(params)])
+
+
+def test_training_bit_exact_cpu_device_fused_on_and_off(smoke_graph,
+                                                        smoke_gnn_cfg):
+    """Acceptance: cpu/device training stays bit-exact on the same seed
+    with the fused kernel both on and off; fused vs unfused agree to
+    numerical tolerance (different reduction order, same math)."""
+    vecs = {}
+    for fused in (False, True):
+        for dev in ("cpu", "device"):
+            cfg = smoke_gnn_cfg.replace(sampling_device=dev,
+                                        fused_gather_agg=fused)
+            tr = A3GNNTrainer(smoke_graph, cfg, seed=0)
+            tr.run_epochs(1, max_steps_per_epoch=3)
+            vecs[(fused, dev)] = _params_vec(tr.params)
+    assert np.array_equal(vecs[(False, "cpu")], vecs[(False, "device")])
+    assert np.array_equal(vecs[(True, "cpu")], vecs[(True, "device")])
+    np.testing.assert_allclose(vecs[(False, "cpu")], vecs[(True, "cpu")],
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_training_bit_exact_multipartition_fused(smoke_graph, smoke_gnn_cfg):
+    from repro.core.multipart import MultiPartitionTrainer
+    cfg0 = smoke_gnn_cfg.replace(partitions=2, halo_budget=16,
+                                 fused_gather_agg=True)
+    vecs = {}
+    for dev in ("cpu", "device"):
+        tr = MultiPartitionTrainer(smoke_graph, cfg0.replace(
+            sampling_device=dev), seed=0)
+        try:
+            for _ in range(2):
+                tr.global_step()
+            vecs[dev] = _params_vec(tr.params)
+        finally:
+            for s in tr.slots:
+                s.pipe.shutdown()
+    assert np.array_equal(vecs["cpu"], vecs["device"])
+
+
+def test_fused_batch_carries_preaggregates(smoke_graph, smoke_gnn_cfg):
+    """generate_batch(fused=True) emits (fused_h_dst, fused_agg) and no
+    feature tensor; batch_device_arrays pads them to the dst level."""
+    from repro.core.sampling import NeighborSampler
+    from repro.graph.batch import batch_device_arrays, batch_bytes, \
+        generate_batch
+    plane = HostFeaturePlane(smoke_graph, FeatureCache(smoke_graph, 0.05))
+    sampler = NeighborSampler(smoke_graph, smoke_gnn_cfg.fanout, seed=0)
+    seeds = np.arange(32)
+    mb = generate_batch(sampler.sample(seeds), plane, smoke_graph,
+                        fused=True)
+    assert mb.features is None
+    n_dst0 = len(mb.blocks[0].dst_ids)
+    assert mb.fused_h_dst.shape == mb.fused_agg.shape == \
+        (n_dst0, smoke_graph.feat_dim)
+    assert batch_bytes(mb) > 0
+    arrays = batch_device_arrays(mb)
+    assert "features" not in arrays
+    assert arrays["h_dst0"].shape == arrays["agg0"].shape
+    assert arrays["h_dst0"].shape[0] >= n_dst0        # pow2-padded dst level
+    # chained-padding invariant: pre-aggregates live at hop 0's dst level,
+    # i.e. the padded row count of hop 0's neighbor matrix
+    assert arrays["h_dst0"].shape[0] == arrays["neigh_idxs"][0].shape[0]
+    # the unfused twin of the same minibatch agrees with the pre-aggregates
+    mb2 = generate_batch(dataclasses.replace(mb, fused_h_dst=None,
+                                             fused_agg=None),
+                         None, smoke_graph)
+    np.testing.assert_array_equal(mb.fused_h_dst,
+                                  mb2.features[:n_dst0])

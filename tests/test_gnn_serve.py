@@ -1,6 +1,8 @@
 """GNN serving engine: continuous batching over the FeaturePlane —
 admission/eviction, train→serve plane sharing, cpu/device parity, and
 streaming feature updates reflected in predictions (the acceptance bar)."""
+from collections import deque
+
 import numpy as np
 import pytest
 
@@ -88,18 +90,44 @@ def test_engine_bounds_completed_history(smoke_graph, smoke_gnn_cfg):
 
 def test_admission_seam_shared_semantics():
     """The serve/common.py helper keeps the pre-seam engine semantics:
-    FIFO order, head-of-line blocking on an unplaceable request."""
-    pending = ["a", "b", "c"]
+    FIFO order, head-of-line blocking on an unplaceable request.  The
+    queue is a deque (O(1) head pop) — semantics unchanged."""
+    pending = deque(["a", "b", "c"])
     running = {}
     slots = [0, 1]
     admitted = admit_pending(pending, running,
                              lambda r: slots.pop(0) if slots else None)
-    assert admitted == 2 and pending == ["c"]
+    assert admitted == 2 and list(pending) == ["c"]
     assert running == {0: "a", 1: "b"}
     # no capacity → head blocks, nothing admitted
     assert admit_pending(pending, running, lambda r: None) == 0
-    assert pending == ["c"]
+    assert list(pending) == ["c"]
     assert latency_stats([])["p50_ms"] == 0.0
+
+
+def test_admission_order_is_submission_order():
+    """Requests admitted across multiple admission rounds retire in the
+    exact submission order — the deque swap must not perturb FIFO."""
+    pending = deque(range(10))
+    running = {}
+    order = []
+    free = deque(range(3))
+
+    def alloc(r):
+        return free.popleft() if free else None
+
+    def on_admit(req, slot):
+        order.append(req)
+
+    while pending:
+        want = min(3, len(pending))
+        n = admit_pending(pending, running, alloc, on_admit)
+        assert n == len(running) == want
+        for slot in sorted(running):             # retire the whole wave
+            free.append(slot)
+        running.clear()
+    assert order == list(range(10))
+    assert admit_pending(pending, running, alloc) == 0   # empty queue no-op
 
 
 # ---------------------------------------------------------------------------
