@@ -1,63 +1,188 @@
-"""Online GNN serving: p50/p99 latency + throughput vs. sampling bias γ.
+"""Online GNN serving under offered load: the partition-routed fabric vs
+the single-engine baseline, and graceful degradation past saturation.
 
-Sweeps the serving engine (serve/gnn_engine.py) over the cache bias rate
-on the products twin with a static hotness cache: higher γ steers the
-incremental sampler toward cache-resident neighbors, so the gather stage
-— the serving-latency bottleneck the paper's feature-movement machinery
-attacks — serves more rows from the cache and fewer from the host store.
-Reported per γ: cache hit rate, queries/s, and p50/p99 end-to-end
-request latency (queue wait included — the continuous-batching number a
-client sees).  Same engine, same request stream, only γ moves.
+Two measurements over the products twin (serve/fabric.py):
 
-On this 1-CPU container both planes gather from host DRAM, so the
-wall-clock γ effect is muted (a saved miss is a saved host read, not a
-saved DMA) — the transferable signal is the hit rate and the saved
-host-store bytes (``CacheStats.bytes_from_host``, the modeled PCIe
-volume); on real silicon every saved miss is a saved host→device DMA.
+  * **aggregate throughput** — closed-loop drain of the same query set
+    through (a) one PR-5-shaped ``GNNInferenceEngine`` over the full
+    graph and (b) a ``ServingFabric`` over P locality partitions.
+    Routing each query to its owner's partition subgraph shrinks the
+    sampled frontier (fewer reachable inputs per seed) and with it every
+    downstream stage — sampling, gather, forward — so the fabric's
+    aggregate qps beats the single engine well past the acceptance bar
+    (≥ 2× at P ≥ 2) on the SAME container, no extra cores involved.
+  * **offered-load sweep** — open-loop arrivals at a rising fraction of
+    the fabric's measured capacity, with SLO-aware admission ON
+    (``GNNConfig.slo_p99_ms``).  Past saturation the fabric sheds load
+    instead of queueing it: reported per level are the served p50/p99
+    (stays bounded near the target — the graceful half) and the shed
+    fraction (rises with overload — the explicit half).
+
+jit discipline: the engines pad every node level to fixed per-engine
+caps, so each replica compiles exactly ONE forward signature — a
+retrace costs more than twenty steady steps on this container, and one
+first seen mid-sweep would stall the fabric long enough to age out its
+whole queue.  The single compile is triggered (and the caches touched)
+before anything is timed, then every engine is warmed with
+measurement-identical closed-loop waves.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import bench_gnn_cfg, emit, save_json
 from repro.core.a3gnn import A3GNNTrainer
+from repro.graph.partition import plan_partitions
 from repro.graph.synthetic import dataset_like
+from repro.serve.common import latency_stats
+from repro.serve.fabric import ServingFabric
 from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
 
-GAMMAS = (1.0, 4.0, 16.0)
-GAMMAS_QUICK = (1.0, 8.0)
-QUERIES, QUERIES_QUICK = 64, 16
-BATCH = 8
+PARTS, PARTS_QUICK = 4, 2
+BATCH = 16                  # per-engine slots in the fabric
+BASE_BATCH = 8              # the PR 5 single-engine baseline shape
+HALO = 64
+SLO_P99_MS = 60.0
+POOL, POOL_QUICK = 256, 96
+# offered load as a fraction of the fabric's measured closed-loop capacity
+LEVELS = (0.5, 1.0, 1.5, 2.0)
+LEVELS_QUICK = (0.8, 1.8)
+HORIZON_S, HORIZON_QUICK_S = 2.0, 0.75
+WARM_WAVES = 3
+
+
+def _closed_loop(engine, nodes, waves=1, rid0=0):
+    """Drain ``waves`` full passes over ``nodes``; returns the last
+    pass's per-call window stats (earlier passes double as jit warmup)."""
+    st = None
+    for w in range(waves):
+        for i, v in enumerate(nodes):
+            engine.submit(GNNRequest(rid=rid0 + w * len(nodes) + i,
+                                     node=int(v)))
+        st = engine.run_to_completion()
+    return st
+
+
+def _warm_sizes(fab, reps=2, seed=1):
+    """Trigger each replica's ONE jit compile (the engines pad every
+    node level to fixed caps, so the forward signature never varies) and
+    pre-touch its partition cache with a couple of random full batches —
+    a compile first seen mid-sweep would stall the fabric ~250 ms, long
+    enough to age out the whole queue."""
+    rng = np.random.default_rng(seed)
+    for part in fab.engines:
+        for eng in part:
+            owned = np.flatnonzero(eng.node_map >= 0)
+            for _ in range(reps):
+                pick = rng.choice(owned, size=eng.batch, replace=False)
+                for j, v in enumerate(pick):
+                    eng.submit(GNNRequest(rid=-1 - j, node=int(v)))
+                eng.run_to_completion()
+
+
+def _offered_load(fab, nodes, rate_qps, horizon_s, rid0):
+    """Open-loop drive: arrivals at fixed rate for ``horizon_s``, then
+    drain.  Queue growth is the fabric's problem — exactly the regime
+    SLO admission exists for."""
+    n_req = max(int(rate_qps * horizon_s), 8)
+    served = []
+    fab.retire_hook = served.append
+    shed0, off0 = fab.slo.shed, fab.slo.offered
+    t0 = time.perf_counter()
+    arrivals = t0 + np.arange(n_req) / rate_qps
+    i = 0
+    while i < n_req or fab.has_work():
+        now = time.perf_counter()
+        while i < n_req and arrivals[i] <= now:
+            fab.submit(GNNRequest(rid=rid0 + i,
+                                  node=int(nodes[i % len(nodes)])))
+            i += 1
+        if fab.has_work():
+            fab.step()
+        elif i < n_req:
+            time.sleep(max(min(arrivals[i] - time.perf_counter(), 1e-3), 0))
+    dt = time.perf_counter() - t0
+    fab.retire_hook = None
+    st = latency_stats(served)
+    offered = fab.slo.offered - off0
+    shed = fab.slo.shed - shed0
+    return {"offered_qps": rate_qps, "requests": n_req, "seconds": dt,
+            "served": len(served), "shed": shed,
+            "shed_fraction": shed / max(offered, 1),
+            "served_qps": len(served) / dt if dt else 0.0,
+            "p50_ms": st.p50_ms, "p99_ms": st.p99_ms}
 
 
 def run(quick: bool = False):
     cfg = bench_gnn_cfg("products")
     if quick:
         cfg = cfg.replace(num_nodes=3_000, num_edges=40_000)
+    parts = PARTS_QUICK if quick else PARTS
+    batch = BASE_BATCH if quick else BATCH
     graph = dataset_like(cfg, seed=0)
     rng = np.random.default_rng(0)
-    n_q = QUERIES_QUICK if quick else QUERIES
-    # distinct nodes: duplicate queries serialize (unique-seed invariant)
-    # and would fragment the full-batch steps the sweep compares
-    nodes = rng.choice(np.where(graph.test_mask)[0], size=n_q, replace=False)
+    # distinct nodes: duplicate in-flight queries serialize (the unique-
+    # seed invariant) and would fragment the full-batch steps compared
+    pool = rng.choice(graph.num_nodes, size=POOL_QUICK if quick else POOL,
+                      replace=False)
 
-    results = {"batch": BATCH, "queries": n_q, "gammas": {}}
-    for gamma in (GAMMAS_QUICK if quick else GAMMAS):
-        tr = A3GNNTrainer(graph, cfg.replace(bias_rate=gamma), seed=0)
-        eng = GNNInferenceEngine.from_trainer(tr, batch=BATCH, seed=0)
-        # warmup wave (one full batch of distinct nodes) absorbs the jit
-        # trace for the full-slot signature; run_to_completion metrics
-        # are per-call windows, so only the hit accounting needs a reset
-        for w in range(BATCH):
-            eng.submit(GNNRequest(rid=-1 - w, node=w))
-        eng.run_to_completion()
-        tr.cache.stats.reset()
-        for rid, v in enumerate(nodes):
-            eng.submit(GNNRequest(rid=rid, node=int(v)))
-        stats = eng.run_to_completion()
-        results["gammas"][gamma] = stats
-        emit(f"serve/gamma{gamma:g}_p50", stats["p50_ms"] * 1e3,
-             f"p99={stats['p99_ms']:.1f}ms qps={stats['queries_per_s']:.1f} "
-             f"hit={stats.get('cache_hit_rate', 0.0):.2f}")
+    tr = A3GNNTrainer(graph, cfg, seed=0)
+
+    # -- single-engine baseline (the PR 5 serving shape) -----------------
+    base = GNNInferenceEngine.from_trainer(tr, batch=BASE_BATCH, seed=0)
+    _closed_loop(base, pool, waves=WARM_WAVES)
+    base_stats = _closed_loop(base, pool)
+    emit("serve/baseline_qps", base_stats["p50_ms"] * 1e3,
+         f"qps={base_stats['queries_per_s']:.0f} "
+         f"p99={base_stats['p99_ms']:.1f}ms batch={BASE_BATCH}")
+
+    # -- fabric: P locality partitions behind one scheduler --------------
+    plan = plan_partitions(graph, parts, "locality", seed=0,
+                           halo_budget=HALO)
+    # capacity probe runs with shedding OFF (a closed-loop burst IS a
+    # deliberately saturated queue — the door would shed it wholesale);
+    # the SLO target switches on for the offered-load sweep below
+    fab = ServingFabric.from_plan(graph, plan, cfg, tr.params, batch=batch,
+                                  replicas=1, slo_p99_ms=0.0, seed=0)
+    _warm_sizes(fab)
+    _closed_loop(fab, pool, waves=WARM_WAVES)
+    fab_stats = _closed_loop(fab, pool)
+    capacity = fab_stats["queries_per_s"]
+    speedup = capacity / max(base_stats["queries_per_s"], 1e-9)
+    emit("serve/fabric_qps", fab_stats["p50_ms"] * 1e3,
+         f"qps={capacity:.0f} p99={fab_stats['p99_ms']:.1f}ms "
+         f"P={parts} batch={batch} speedup={speedup:.2f}x")
+
+    # -- offered-load sweep: degradation past saturation -----------------
+    fab.slo.slo_p99_ms = SLO_P99_MS
+    horizon = HORIZON_QUICK_S if quick else HORIZON_S
+    levels = LEVELS_QUICK if quick else LEVELS
+    # rehearsal pass (discarded): open-loop arrival patterns hit jit
+    # signatures the closed-loop warmup cannot reach — absorb them here
+    # so a measured level never eats a retrace stall
+    for j, frac in enumerate(levels):
+        _offered_load(fab, pool, frac * capacity, horizon / 2,
+                      rid0=500_000 * (j + 1))
+    sweep = []
+    for j, frac in enumerate(levels):
+        level = _offered_load(fab, pool, frac * capacity, horizon,
+                              rid0=100_000 * (j + 1))
+        level["load_fraction"] = frac
+        sweep.append(level)
+        emit(f"serve/load{frac:g}_p99", level["p99_ms"] * 1e3,
+             f"shed={level['shed_fraction']:.2f} "
+             f"served={level['served_qps']:.0f}q/s of "
+             f"{level['offered_qps']:.0f} offered")
+
+    results = {
+        "partitions": parts, "batch": batch, "replicas": 1,
+        "baseline_batch": BASE_BATCH, "slo_p99_ms": SLO_P99_MS,
+        "queries": len(pool),
+        "baseline": base_stats, "fabric": fab_stats,
+        "aggregate_speedup": speedup,
+        "offered_load": sweep,
+    }
     save_json("fig_serve", results)
     return results

@@ -19,7 +19,11 @@
 #          (also part of the fast job, as its own JUnit artifact).
 #   fast:  everything except tests marked `slow` — the sub-minute signal
 #          for every push; this is where the serving-engine tests
-#          (tests/test_gnn_serve.py) run.  The CI fast job does NOT
+#          (tests/test_gnn_serve.py) and the serving-fabric tests
+#          (tests/test_fabric.py — ServingEngine conformance, partition
+#          routing, replica weight refresh, SLO shedding; the saturation
+#          sweep is `slow`-marked and runs in `full`) run.  The CI fast
+#          job does NOT
 #          install `hypothesis`, keeping the tests/_hypothesis_compat.py
 #          shim path covered.  The kernel/plane/streaming files are
 #          skipped here (the kernels lane owns them) so the fast job

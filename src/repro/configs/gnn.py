@@ -101,6 +101,13 @@ class GNNConfig:
     # steps WHEN stale (a FeatureStore update touched a halo-resident row);
     # 0 → no periodic refresh (explicit refresh_halo_features() only)
     halo_refresh_interval: int = 0
+    # --- serving (serve/fabric.py) ---
+    # target p99 end-to-end latency for SLO-aware admission; ≤ 0 disables
+    # shedding (unconditional admission — queue wait unbounded past
+    # saturation, the pre-SLO behavior)
+    slo_p99_ms: float = 0.0
+    # engines per partition behind the fabric's shared admission scheduler
+    serve_replicas: int = 1
     # training
     lr: float = 3e-3
     dropout: float = 0.0

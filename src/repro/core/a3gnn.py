@@ -242,6 +242,16 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
                         cache=self.cache, weight_fn=self.weight_fn,
                         seed=self.seed)
 
+    # weight hand-off to serving replicas (same get/set-weights
+    # discipline as MultiPartitionTrainer — jax trees are immutable, so
+    # the export is a consistent snapshot the trainer replaces, never
+    # mutates, as it keeps stepping)
+    def get_weights(self) -> Dict:
+        return {"params": self.params}
+
+    def set_weights(self, weights: Dict):
+        self.params = weights["params"]
+
     # checkpoint/restart interface: TrainerCheckpointMixin provides
     # state_dict/load_state_dict/save/restore (+ the partition-count guard)
     def checkpoint_extra(self) -> Dict:

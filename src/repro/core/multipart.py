@@ -243,7 +243,6 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         # streaming-update state (attach_feature_store)
         self.halo_refreshes = 0
         self._halo_dirty = False
-        self._owned_local_map = None     # lazy (N,) owned-local index
 
     # ------------------------------------------------------------------
     def _fill_halo_features(self) -> int:
@@ -271,15 +270,10 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
     # (graph/storage.py); fleet routing: owner's plane now, halo later
     # ------------------------------------------------------------------
     def _owned_local(self) -> np.ndarray:
-        """(N,) local id of each node WITHIN its owning partition — one
-        shared index next to ``plan.owner`` (not a per-partition N-map),
-        so routing streamed updates costs O(N) memory once, not P×N."""
-        if self._owned_local_map is None:
-            m = np.zeros(self.full_graph.num_nodes, dtype=np.int32)
-            for ns in self.plan.node_sets:
-                m[ns] = np.arange(len(ns), dtype=np.int32)
-            self._owned_local_map = m
-        return self._owned_local_map
+        """(N,) local id of each node WITHIN its owning partition — the
+        plan's shared ownership-lookup index (``PartitionPlan.local_ids``),
+        the same map the serving fabric routes queries through."""
+        return self.plan.local_ids()
 
     def _local_id(self, p: int, node: int) -> int:
         """Local id of global ``node`` in partition p's subgraph (owned
@@ -433,6 +427,21 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.global_steps += 1
         self._maybe_refresh_halo()       # same contract as the synced step
         return float(np.mean(losses)), float(np.mean(accs))
+
+    # ------------------------------------------------------------------
+    # weight hand-off (trainer → serving replicas, SNIPPETS §2's
+    # get/set-weights discipline): the exported tree is the live params
+    # reference — jax trees are immutable and every optimizer step
+    # REPLACES them, so a replica holding the export keeps a consistent
+    # snapshot while the trainer moves on.  ``ServingFabric.refresh_
+    # weights`` pulls this between engine steps (no in-flight request
+    # ever sees a half-updated model).
+    # ------------------------------------------------------------------
+    def get_weights(self) -> Dict:
+        return {"params": self.params}
+
+    def set_weights(self, weights: Dict):
+        self.params = weights["params"]
 
     # ------------------------------------------------------------------
     def make_pipeline(self) -> MultiPipeline:

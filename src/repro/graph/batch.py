@@ -10,7 +10,7 @@ loop) and whose device backend runs the Pallas cache gather.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Optional, Union
+from typing import TYPE_CHECKING, Optional, Sequence, Union
 
 import numpy as np
 
@@ -49,19 +49,41 @@ def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-def batch_device_arrays(mb: MiniBatch):
-    """Convert to jit-friendly arrays with CHAINED pow2 padding.
+def batch_device_arrays(mb: MiniBatch, pad_seed_level: bool = False,
+                        level_caps: Optional[Sequence[int]] = None):
+    """Convert to jit-friendly arrays with CHAINED padding.
 
     Invariant required by models/gnn.py: the padded dst count of hop i equals
     the padded src count of hop i+1 (dst_ids ARE the prefix of the next hop's
     src_ids, so one pad size per node level).  Padded neighbor rows are -1
-    (masked out); padded feature rows are zero.  The final level (seeds) is
-    left at the exact batch size, which is constant across steps."""
+    (masked out); padded feature rows are zero.
+
+    Three padding regimes per node level:
+
+      * default — pow2 buckets, seeds exact (training: the seed count is
+        the constant ``batch_size``, hop sizes drift within a few buckets
+        and the retraces amortize over a long run);
+      * ``pad_seed_level`` — seeds pow2-bucket too (a serving engine
+        admits 1..batch seeds per step);
+      * ``level_caps`` — every level pads to a FIXED cap (input-hop
+        first, same order as ``sizes``): ONE jit signature ever, for
+        latency-SLO serving where a single ~250 ms mid-sweep retrace
+        stalls the fabric long enough to age out its whole queue.
+
+    Padded rows are inert either way: they reference only masked −1
+    neighbors, so real logits never see them."""
     n_levels = len(mb.blocks) + 1
     # level sizes: [n_src_hop0, n_dst_hop0 == n_src_hop1, ..., n_seeds]
     sizes = [len(mb.blocks[0].src_ids)] + [len(b.dst_ids) for b in mb.blocks]
-    pads = [_pow2(s) for s in sizes]
-    pads[-1] = sizes[-1]                        # seeds: exact batch size
+    if level_caps is not None:
+        if len(level_caps) != n_levels:
+            raise ValueError(f"level_caps has {len(level_caps)} entries "
+                             f"for {n_levels} node levels")
+        pads = [max(int(c), s) for c, s in zip(level_caps, sizes)]
+    else:
+        pads = [_pow2(s) for s in sizes]
+        if not pad_seed_level:
+            pads[-1] = sizes[-1]                # seeds: exact batch size
     neigh_idxs = []
     for i, blk in enumerate(mb.blocks):
         pad_dst = pads[i + 1]
@@ -89,12 +111,19 @@ def batch_device_arrays(mb: MiniBatch):
     return out
 
 
-def inference_arrays(mb: MiniBatch):
+def inference_arrays(mb: MiniBatch,
+                     level_caps: Optional[Sequence[int]] = None):
     """Forward-only view of ``batch_device_arrays`` for the serving path
-    (serve/gnn_engine.py): same chained-padding invariant, no labels —
-    the engine consumes per-seed logits; the exact seed level bounds the
-    jitted forward to at most one signature per active-slot count."""
-    arrays = batch_device_arrays(mb)
+    (serve/gnn_engine.py): same chained-padding invariant, no labels.
+    With ``level_caps`` (the engines pass their precomputed per-level
+    maxima) every step has ONE fixed shape — serving admits a varying
+    seed count per step AND hop sizes vary with which seeds get
+    co-batched, so shape-following pads retrace jit mid-serving (~250 ms
+    each on this container, long enough that a latency-SLO fabric ages
+    out its whole queue).  The engine reads only the real-seed prefix of
+    the logits."""
+    arrays = batch_device_arrays(mb, pad_seed_level=True,
+                                 level_caps=level_caps)
     return {"features": arrays["features"],
             "neigh_idxs": arrays["neigh_idxs"],
             "sizes": arrays["sizes"]}

@@ -23,7 +23,7 @@ setting (the regression anchor)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -160,10 +160,48 @@ class PartitionPlan:
     halo_ranked: List[np.ndarray] = field(default_factory=list, repr=False)
     halo_ranked_aff: List[np.ndarray] = field(default_factory=list,
                                               repr=False)
+    # lazy (N,) owned-local index (ownership lookup API) — one shared map
+    # next to ``owner``, not a per-partition N-map, so routing costs O(N)
+    # memory once, not P×N
+    _local_ids: Optional[np.ndarray] = field(default=None, repr=False)
 
     @property
     def parts(self) -> int:
         return len(self.node_sets)
+
+    # ------------------------------------------------------------------
+    # ownership lookup — the routing API the serving fabric and the
+    # multi-partition streaming path share: global node → (owner, local)
+    # ------------------------------------------------------------------
+    def owner_of(self, nodes) -> np.ndarray:
+        """Owning partition of each global node id (vectorized)."""
+        return self.owner[np.asarray(nodes, dtype=np.int64)]
+
+    def local_ids(self) -> np.ndarray:
+        """(N,) local id of each node WITHIN its owning partition's
+        subgraph (owned prefix — halo tails are borrowed features, not
+        membership).  Computed once and cached on the plan."""
+        if self._local_ids is None:
+            m = np.zeros(len(self.owner), dtype=np.int32)
+            for ns in self.node_sets:
+                m[ns] = np.arange(len(ns), dtype=np.int32)
+            self._local_ids = m
+        return self._local_ids
+
+    def node_maps(self) -> List[np.ndarray]:
+        """Per-partition (N,) global → local translation: the owned
+        prefix id for partition p's nodes, −1 everywhere else.  Halo ids
+        are deliberately −1 — a query for a halo-resident node routes to
+        its OWNER (where its out-edges live); the halo tail only serves
+        borrowed feature rows to cross-cut neighborhoods."""
+        local = self.local_ids()
+        maps = []
+        for p in range(self.parts):
+            m = np.full(len(self.owner), -1, dtype=np.int32)
+            mine = self.owner == p
+            m[mine] = local[mine]
+            maps.append(m)
+        return maps
 
     @property
     def halo_rows(self) -> int:

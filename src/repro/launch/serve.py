@@ -11,6 +11,15 @@ streaming feature update mid-serving):
 
   PYTHONPATH=src python -m repro.launch.serve --gnn \
       --arch graphsage-products --smoke --queries 16 --batch 4
+
+Partition-routed serving fabric (``--partitions`` > 1): a multi-partition
+trainer warms per-partition planes, then a ``ServingFabric`` routes node
+queries to owner-partition replicas behind SLO-aware admission, with a
+mid-serving trainer → replica weight refresh:
+
+  PYTHONPATH=src python -m repro.launch.serve --gnn \
+      --arch graphsage-products --smoke --queries 32 --batch 4 \
+      --partitions 2 --replicas 2 --slo-p99-ms 50
 """
 from __future__ import annotations
 
@@ -40,6 +49,75 @@ def run_lm_serve(args):
     return 0
 
 
+def run_fabric_serve(args, cfg, graph):
+    """Partition-routed fleet: warm a multi-partition trainer, serve the
+    query load through a ``ServingFabric`` (ownership routing + replicas
+    + SLO admission), refresh weights from the live trainer mid-serving,
+    then drive a saturating burst to show explicit shedding."""
+    from repro.core.multipart import MultiPartitionTrainer
+    from repro.serve.fabric import ServingFabric
+    from repro.serve.gnn_engine import GNNRequest
+
+    cfg = cfg.replace(partitions=args.partitions)
+    tr = MultiPartitionTrainer(graph, cfg, seed=args.seed)
+    tr.run_epochs(1, max_steps_per_epoch=args.train_steps)
+    print(f"[train] {args.train_steps} steps over {args.partitions} "
+          f"partitions warmed the planes: "
+          f"cache_hit_rate={tr.cache_hit_rate:.3f}")
+
+    fab = ServingFabric.from_trainer(tr, batch=args.batch,
+                                     replicas=args.replicas,
+                                     slo_p99_ms=args.slo_p99_ms,
+                                     seed=args.seed)
+    # trigger each replica's one jit compile BEFORE timing anything: a
+    # ~250 ms compile inside the first served queries would poison the
+    # SLO scheduler's service estimate into shedding the real load
+    for part in fab.engines:
+        for eng in part:
+            owned = np.flatnonzero(eng.node_map >= 0)
+            for j, v in enumerate(owned[:eng.batch]):
+                eng.submit(GNNRequest(rid=-1 - j, node=int(v)))
+            eng.run_to_completion()
+    fab.window.reset()
+    warm_per_part = fab.partition_completed()
+
+    rng = np.random.default_rng(args.seed)
+    nodes = rng.choice(np.where(graph.test_mask)[0], size=args.queries,
+                       replace=False)
+    for rid, v in enumerate(nodes):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    stats = fab.run_to_completion()
+    per_part = [a - b for a, b in zip(fab.partition_completed(),
+                                      warm_per_part)]
+    print(f"[fabric] {stats['completed']} queries in "
+          f"{stats['seconds']:.2f}s → {stats['queries_per_s']:.1f} q/s "
+          f"across {args.partitions}×{args.replicas} replicas "
+          f"(per-partition {per_part}); latency p50 "
+          f"{stats['p50_ms']:.1f} ms p99 {stats['p99_ms']:.1f} ms")
+
+    # trainer → replica hand-off: swap every replica's tree between steps
+    tr.global_step()
+    fab.refresh_weights()
+    fab.submit(GNNRequest(rid=args.queries, node=int(nodes[0])))
+    fab.run_to_completion()
+    print(f"[refresh] trainer step → refresh_weights() → re-query "
+          f"pred={fab.completed[-1].pred} (served on the updated tree)")
+
+    # saturating burst: the door sheds what it cannot serve inside the SLO
+    burst = np.where(fab.plan.owner_of(
+        np.arange(graph.num_nodes)) >= 0)[0][:args.queries * 8]
+    mark = fab.slo.offered
+    for rid, v in enumerate(burst):
+        fab.submit(GNNRequest(rid=10_000 + rid, node=int(v)))
+    fab.run_to_completion()
+    offered = fab.slo.offered - mark
+    print(f"[slo] burst of {offered} offered at target "
+          f"{fab.slo.slo_p99_ms:.0f} ms: shed {fab.slo.shed} "
+          f"(fraction {fab.shed_fraction:.2f}), deferrals "
+          f"{fab.slo.deferrals} — degradation is explicit, not queued")
+    return 0
+
+
 def run_gnn_serve(args):
     """Online GNN inference: brief training warms the params AND the γ/Θ
     feature cache, then the SAME FeaturePlane instance serves node
@@ -63,6 +141,9 @@ def run_gnn_serve(args):
     graph = dataset_like(cfg, seed=args.seed)
     print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
           f"{graph.num_edges} edges, {graph.num_classes} classes")
+
+    if args.partitions > 1:
+        return run_fabric_serve(args, cfg, graph)
 
     tr = A3GNNTrainer(graph, cfg, seed=args.seed)
     pipe = tr.make_pipeline()
@@ -138,6 +219,16 @@ def main():
     ap.add_argument("--sampling-device", default=None,
                     choices=[None, "cpu", "device", "auto"],
                     help="feature-plane backend for the serving gather")
+    ap.add_argument("--partitions", type=int, default=1,
+                    help="> 1 serves through the partition-routed "
+                         "ServingFabric (serve/fabric.py) instead of one "
+                         "engine (--gnn)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas per partition behind the "
+                         "fabric's shared admission scheduler")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="target p99 for SLO-aware admission (0 disables "
+                         "shedding; fabric only)")
     args = ap.parse_args()
 
     if args.gnn or args.arch.startswith("graphsage"):

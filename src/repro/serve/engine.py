@@ -10,17 +10,17 @@ unchanged on the production mesh (the dry-run's decode cells are exactly
 ``engine.step``'s computation).
 
 GNN node inference is NOT served here — that is serve/gnn_engine.py, which
-batches single-shot node queries over the training-side FeaturePlane.  The
-two engines share the slot-admission and latency-accounting seam in
-serve/common.py (``admit_pending`` / ``latency_stats``), so continuous-
-batching policy changes land once and apply to both.
+batches single-shot node queries over the training-side FeaturePlane.  Both
+engines are ``serve/common.py`` ``ServingEngine``s built on the shared
+``EngineBase`` (slot accounting, admission, retirement bookkeeping, the
+``run_to_completion`` drive loop), so continuous-batching policy changes
+land once and apply to both.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from collections import deque
-from typing import Deque, Dict, List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +28,7 @@ import numpy as np
 
 from repro.models.api import build
 from repro.models.params import init_params
-from repro.serve.common import (admit_pending, drain, latency_stats,
-                                trim_completed)
+from repro.serve.common import EngineBase, admit_pending
 from repro.serve.kv_cache import KVCacheManager
 
 
@@ -40,18 +39,18 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never stop early
     out_tokens: List[int] = field(default_factory=list)
+    status: str = "pending"            # pending | done | shed
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
 
 
-class Engine:
+class Engine(EngineBase):
     def __init__(self, cfg, params=None, batch: int = 8, max_len: int = 256,
                  temperature: float = 0.0, seed: int = 0,
                  keep_completed: int = 4096):
         self.cfg = cfg
         self.model = build(cfg)
-        self.batch = batch
         self.max_len = max_len
         self.temperature = temperature
         rng = jax.random.PRNGKey(seed)
@@ -62,20 +61,11 @@ class Engine:
         self.kv = KVCacheManager(caches, batch, max_len)
         self._decode = jax.jit(self.model.decode)
         self._rng = np.random.default_rng(seed)
-        self.pending: Deque[Request] = deque()
+        self._init_serving(batch, keep_completed)
         self.running: Dict[int, Request] = {}   # slot -> request
-        # retained history is BOUNDED, same policy as the GNN engine (an
-        # online engine must not grow per-request state forever)
-        self.keep_completed = max(int(keep_completed), 1)
-        self.completed: List[Request] = []
-        self.total_completed = 0
         self._tokens = np.zeros(batch, np.int32)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        req.t_submit = time.perf_counter()
-        self.pending.append(req)
-
     def _prefill_into_slot(self, req: Request, slot: int):
         """Sequential decode-based prefill: feeds prompt tokens one at a time
         through the decode path (single code path across all families —
@@ -138,22 +128,11 @@ class Engine:
                 req.t_done = time.perf_counter()
                 self.kv.release(slot)
                 del self.running[slot]
-                self.completed.append(req)
-                self.total_completed += 1
-        trim_completed(self.completed, self.keep_completed)
+                self._retire(req)
         return n_emitted
 
     # ------------------------------------------------------------------
-    def run_to_completion(self, max_iters: int = 10_000) -> Dict[str, float]:
-        """Drain the queue; every metric covers THIS call's window (the
-        requests completed here), so repeated calls stay self-consistent.
-        Latency percentiles cover the window's tail still inside the
-        bounded ``keep_completed`` history."""
-        done0 = self.total_completed
-        emitted, dt = drain(self, max_iters)
-        done = self.total_completed - done0
-        window = self.completed[-done:] if done else []
-        return {"tokens": emitted, "seconds": dt,
-                "tokens_per_s": emitted / dt if dt else 0.0,
-                "completed": done,
-                **latency_stats(window)}
+    def _window_metrics(self, mark: Dict, emitted: int, done: int,
+                        dt: float) -> Dict[str, float]:
+        return {"tokens": emitted,
+                "tokens_per_s": emitted / dt if dt else 0.0}

@@ -1,0 +1,323 @@
+"""ServingFabric — partition-routed, replicated, SLO-aware GNN serving.
+
+One engine retires every admitted request on one partition; the layer
+that faces MILLIONS of users is a fabric over a partition fleet (the
+paper's scale-out claim, turned toward inference):
+
+  * **partition routing** — each node query lands on the partition that
+    OWNS the node (``PartitionPlan`` ownership, the same lookup the
+    multi-partition trainer routes streamed updates through).  The
+    owner's subgraph carries the node's out-edges plus its halo-budgeted
+    boundary (feature-only leaves), so cross-cut neighborhoods are
+    sampled and gathered entirely from the owner's FeaturePlane — no
+    remote fetch on the query path, exactly the paper's no-remote-access
+    training discipline.  Routing to a smaller, locality-grown subgraph
+    is also the throughput win: the sampled frontier (and with it the
+    gather) is a fraction of the full-graph one.
+  * **replication behind one scheduler** — ``replicas`` engines per
+    partition, all sharing the partition's plane (one warmed cache, one
+    accounting stream), behind a single fabric-level admission queue.
+    Dispatch is least-loaded-first among the owner's replicas.  Weight
+    hand-off follows the trainer's get/set-weights discipline: a
+    refresh swaps every replica's tree BETWEEN steps, so in-flight
+    requests never see a half-updated model and none are dropped.
+  * **SLO-aware admission** — a target p99 (``GNNConfig.slo_p99_ms``)
+    drives ``serve/common.py`` ``SLOAdmission``: shed-or-defer decisions
+    computed from the rolling ``LatencyWindow``, so past saturation the
+    fabric sheds load (cheap, explicit, ``status == "shed"``) instead of
+    letting queue wait blow up — p99 of what it DOES serve stays
+    bounded.
+
+The fabric itself conforms to the ``ServingEngine`` protocol — to a
+drive loop, a benchmark or the launcher, a fleet is indistinguishable
+from one engine.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.graph.partition import PartitionPlan
+from repro.graph.storage import Graph
+from repro.serve.common import EngineBase, SLOAdmission, drain
+from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
+
+
+class ServingFabric(EngineBase):
+    """Partition-routed fleet of ``GNNInferenceEngine`` replicas behind
+    one SLO-aware admission scheduler.
+
+    ``planes[p]`` serves every replica of partition p (the warmed cache
+    and its accounting are per PARTITION, shared across replicas);
+    ``params`` is shared fleet-wide and refreshed via
+    ``refresh_weights``.  Requests use GLOBAL node ids throughout —
+    translation to partition-local ids happens inside the replica at
+    sampling time (``node_map``)."""
+
+    def __init__(self, graph: Graph, plan: PartitionPlan, cfg, params,
+                 planes: Optional[List] = None,
+                 weight_fns: Optional[List[Optional[Callable]]] = None,
+                 batch: int = 8, replicas: int = 1,
+                 slo_p99_ms: Optional[float] = None, seed: int = 0,
+                 keep_completed: int = 4096,
+                 weight_source=None):
+        if replicas < 1:
+            raise ValueError(f"replicas must be ≥ 1, got {replicas}")
+        self.graph = graph
+        self.plan = plan
+        self.cfg = cfg
+        self.replicas = replicas
+        self.engine_batch = batch
+        self._weight_source = weight_source
+        self._init_serving(batch * plan.parts * replicas, keep_completed,
+                           window=max(256, 4 * batch * plan.parts))
+        self.slo = SLOAdmission(
+            cfg.slo_p99_ms if slo_p99_ms is None else slo_p99_ms,
+            self.window, slots=self.batch)
+        node_maps = plan.node_maps()
+        planes = planes if planes is not None else [None] * plan.parts
+        weight_fns = weight_fns if weight_fns is not None else (
+            [None] * plan.parts)
+        # engines[p][r]: replica r of partition p; replicas share the
+        # partition plane, get distinct sampler seeds
+        self.engines: List[List[GNNInferenceEngine]] = [
+            [GNNInferenceEngine(plan.subgraphs[p], cfg, params,
+                                plane=planes[p], batch=batch,
+                                weight_fn=weight_fns[p],
+                                seed=seed + 101 * p + r,
+                                node_map=node_maps[p],
+                                retire_hook=self._on_replica_retire,
+                                keep_completed=max(batch, 16))
+             for r in range(replicas)]
+            for p in range(plan.parts)]
+        self.steps = 0
+        self.shed_requests: List[GNNRequest] = []
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_trainer(cls, trainer, batch: int = 8,
+                     replicas: Optional[int] = None,
+                     slo_p99_ms: Optional[float] = None,
+                     seed: int = 0) -> "ServingFabric":
+        """Serve over a ``MultiPartitionTrainer``'s own machinery: each
+        partition's replicas share the slot's live feature plane (warmed
+        cache + accounting), the γ bias is the slot's own ``weight_fn``,
+        halo rows are the ones the trainer's exchange filled, and
+        ``refresh_weights()`` pulls the trainer's exported tree."""
+        replicas = (replicas if replicas is not None
+                    else getattr(trainer.cfg, "serve_replicas", 1))
+        return cls(trainer.full_graph, trainer.plan, trainer.cfg,
+                   trainer.get_weights()["params"],
+                   planes=[s.pipe.plane for s in trainer.slots],
+                   weight_fns=[s.weight_fn for s in trainer.slots],
+                   batch=batch, replicas=replicas, slo_p99_ms=slo_p99_ms,
+                   seed=seed, weight_source=trainer)
+
+    @classmethod
+    def from_plan(cls, graph: Graph, plan: PartitionPlan, cfg, params,
+                  batch: int = 8, replicas: int = 1,
+                  slo_p99_ms: Optional[float] = None,
+                  seed: int = 0) -> "ServingFabric":
+        """Standalone fabric (no trainer): per-partition caches + planes
+        over the plan's subgraphs, halo feature rows filled host-locally
+        from the full graph (the one-host equivalent of the training
+        path's ``halo_all_to_all`` result — same rows, same planes)."""
+        from repro.core.cache import FeatureCache
+        from repro.core.feature_plane import make_feature_plane
+        from repro.core.locality import bias_weight_fn
+        planes, weight_fns = [], []
+        for p, sub in enumerate(plan.subgraphs):
+            cache = (FeatureCache(sub, cfg.cache_volume_mb, cfg.cache_policy)
+                     if cfg.cache_volume_mb > 0 else None)
+            weight_fns.append(bias_weight_fn(cache, cfg.bias_rate)
+                              if (cache is not None and cfg.bias_rate > 1.0)
+                              else None)
+            plane = make_feature_plane(sub, cache, cfg.sampling_device)
+            halo = plan.halo_sets[p] if plan.halo_sets else []
+            if len(halo):
+                n_owned = len(plan.node_sets[p])
+                local = np.arange(n_owned, n_owned + len(halo))
+                plane.fill_rows(local, graph.features[halo])
+            planes.append(plane)
+        return cls(graph, plan, cfg, params, planes=planes,
+                   weight_fns=weight_fns, batch=batch, replicas=replicas,
+                   slo_p99_ms=slo_p99_ms, seed=seed)
+
+    # ------------------------------------------------------------------
+    # ServingEngine surface — aggregate views over the fleet
+    # ------------------------------------------------------------------
+    @property
+    def all_engines(self) -> List[GNNInferenceEngine]:
+        return [e for part in self.engines for e in part]
+
+    @property
+    def running(self) -> Dict:
+        """Fleet-wide slot → request view, keyed (partition, replica,
+        slot).  Built on access — the replicas own the live dicts."""
+        return {(p, r, s): req
+                for p, part in enumerate(self.engines)
+                for r, eng in enumerate(part)
+                for s, req in eng.running.items()}
+
+    def free_slots(self) -> List:
+        return [(p, r, s)
+                for p, part in enumerate(self.engines)
+                for r, eng in enumerate(part)
+                for s in eng.free_slots()]
+
+    def utilization(self) -> float:
+        busy = sum(len(e.running) for e in self.all_engines)
+        return busy / max(self.batch, 1)
+
+    def _queued(self) -> int:
+        """Backlog ahead of a new arrival: the fabric queue plus work
+        already dispatched into the replicas."""
+        return len(self.pending) + sum(len(e.pending) + len(e.running)
+                                       for e in self.all_engines)
+
+    def has_work(self) -> bool:
+        """Fabric work covers its own queue AND the replicas' — the
+        shared drain must not stop while a replica still holds queued
+        work (e.g. a same-node twin waiting out one engine iteration)."""
+        return bool(self.pending) or any(e.has_work()
+                                         for e in self.all_engines)
+
+    # ------------------------------------------------------------------
+    def _validate(self, req: GNNRequest):
+        if not (0 <= req.node < self.graph.num_nodes):
+            raise ValueError(f"node {req.node} outside graph "
+                             f"[0, {self.graph.num_nodes})")
+
+    def submit(self, req: GNNRequest):
+        """Offered load enters HERE: route (stamp the owner partition)
+        and run the door half of SLO admission — a request whose
+        estimated wait already busts the target is shed at the door,
+        before it consumes queue space."""
+        self._validate(req)
+        req.partition = int(self.plan.owner_of([req.node])[0])
+        req.t_submit = time.perf_counter()
+        if self.slo.on_offer(self._queued()) == "shed":
+            self._shed(req)
+            return
+        self.pending.append(req)
+
+    def _shed(self, req: GNNRequest):
+        req.t_first = req.t_done = time.perf_counter()
+        req.status = "shed"                     # pred stays the −1 sentinel
+        self.shed_requests.append(req)
+        if len(self.shed_requests) > self.keep_completed:
+            del self.shed_requests[:len(self.shed_requests)
+                                   - self.keep_completed]
+
+    def _on_replica_retire(self, req: GNNRequest):
+        """Replica retirement surfaces at the fabric: one fleet-wide
+        history + rolling window (the SLO scheduler's input)."""
+        self.completed.append(req)
+        self.total_completed += 1
+        self.window.record(req)
+        from repro.serve.common import trim_completed
+        trim_completed(self.completed, self.keep_completed)
+        if self.retire_hook is not None:
+            self.retire_hook(req)
+
+    # ------------------------------------------------------------------
+    def _dispatch_pass(self):
+        """Drain the fabric queue toward the replicas: per request, the
+        SLO decision (shed the hopeless, defer the currently-unplaceable)
+        then least-loaded dispatch among the owner's replicas.  A
+        deferred request keeps its place; requests for OTHER partitions
+        behind it still dispatch (no cross-partition head-of-line
+        blocking)."""
+        now = time.perf_counter()
+        keep: List[GNNRequest] = []
+        while self.pending:
+            req = self.pending.popleft()
+            part = self.engines[req.partition]
+            # capacity = a replica with a free slot not already serving
+            # this node (the unique-seed invariant)
+            candidates = [e for e in part
+                          if len(e.running) + len(e.pending) < e.batch
+                          and not any(r.node == req.node for r in
+                                      list(e.running.values())
+                                      + list(e.pending))]
+            verdict = self.slo.on_dispatch((now - req.t_submit) * 1e3,
+                                           bool(candidates))
+            if verdict == "shed":
+                self._shed(req)
+            elif verdict == "defer":
+                keep.append(req)
+            else:
+                target = min(candidates,
+                             key=lambda e: len(e.running) + len(e.pending))
+                target.submit(req)
+        self.pending.extend(keep)
+
+    def step(self) -> int:
+        """One fabric tick: a dispatch pass, then one engine step on
+        every replica with work in flight.  Returns fleet-wide
+        retirements."""
+        self._dispatch_pass()
+        retired = 0
+        for eng in self.all_engines:
+            if eng.has_work():
+                retired += eng.step()
+        self.steps += 1
+        return retired
+
+    # ------------------------------------------------------------------
+    # weight hand-off: trainer → every replica, between steps
+    # ------------------------------------------------------------------
+    def refresh_weights(self, weights: Optional[Dict] = None):
+        """Swap every replica's params (the get/set-weights discipline).
+        With no argument, pulls from the trainer this fabric was built
+        from.  In-flight requests are NOT dropped: a single-shot query is
+        computed wholly inside one engine step, so everything retired
+        after this call used the refreshed tree."""
+        if weights is None:
+            if self._weight_source is None:
+                raise ValueError("no weight source: pass weights= or build "
+                                 "the fabric with from_trainer")
+            weights = self._weight_source.get_weights()
+        for eng in self.all_engines:
+            eng.set_weights(weights)
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    @property
+    def shed_fraction(self) -> float:
+        return self.slo.shed_fraction
+
+    def partition_completed(self) -> List[int]:
+        """Fleet-wide retirements per partition (routing observability)."""
+        return [sum(e.total_completed for e in part)
+                for part in self.engines]
+
+    def _begin_window(self) -> Dict:
+        return {"steps": self.steps, "offered": self.slo.offered,
+                "shed": self.slo.shed, "deferrals": self.slo.deferrals}
+
+    def _window_metrics(self, mark: Dict, emitted: int, done: int,
+                        dt: float) -> Dict[str, float]:
+        offered = self.slo.offered - mark["offered"]
+        shed = self.slo.shed - mark["shed"]
+        return {"queries_per_s": done / dt if dt else 0.0,
+                "fabric_steps": self.steps - mark["steps"],
+                "offered": offered, "shed": shed,
+                "deferrals": self.slo.deferrals - mark["deferrals"],
+                "shed_fraction": shed / offered if offered else 0.0}
+
+    def run_to_completion(self, max_iters: int = 10_000) -> Dict[str, float]:
+        stats = super().run_to_completion(max_iters)
+        caches = [e.plane.stats for e in
+                  (part[0] for part in self.engines)]
+        hits = sum(c.hits for c in caches if c is not None)
+        total = hits + sum(c.misses for c in caches if c is not None)
+        stats["cache_hit_rate"] = hits / total if total else 0.0
+        return stats
+
+    def drain(self, max_iters: int = 10_000):
+        """Step until every queue (fabric + replicas) is empty."""
+        return drain(self, max_iters)

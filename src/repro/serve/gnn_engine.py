@@ -15,12 +15,21 @@ affordable on CPU-GPU platforms (paper §III):
     hit/miss accounting and the device-mirror versioning all carry over
     from training to serving;
   * **continuous batching** — a fixed pool of ``batch`` slots, FIFO
-    admission through the serve/common.py seam shared with the LM decode
-    engine, one jitted forward-only step per iteration over the active
-    slots (seed level exact, upper hops pow2-bucketed — at most
-    ``batch`` jit signatures, and no phantom filler traffic through the
-    shared plane), completed requests retire immediately and waiting
-    queries join.
+    admission through the serve/common.py ``EngineBase`` seam shared
+    with the LM decode engine (the ``ServingEngine`` contract), one
+    jitted forward-only step per iteration over the active slots (every
+    node level padded to a fixed per-engine cap — ONE jit signature,
+    and no phantom filler traffic through the shared plane), completed
+    requests retire immediately and waiting queries join.
+
+As a partition replica (serve/fabric.py): constructed with a
+``node_map`` (global → local id, −1 for nodes owned elsewhere) the
+engine serves GLOBAL node ids against its partition subgraph — queries
+keep their fleet-wide identity, seeds are translated only at sampling
+time, and the fabric's ``retire_hook`` observes every retirement.
+Weight hand-off follows the get/set-weights discipline: a trainer's
+exported tree swaps in BETWEEN steps, so in-flight requests (each
+computed wholly inside one step) never see a half-updated model.
 
 Streaming updates: subscribe the plane to a ``graph/storage.py``
 ``FeatureStore`` (``plane.subscribe_to(store)``) and a mid-serving
@@ -32,8 +41,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -41,23 +49,32 @@ from repro.core.feature_plane import FeaturePlane, make_feature_plane
 from repro.core.sampling import NeighborSampler
 from repro.graph.batch import generate_batch, inference_arrays
 from repro.graph.storage import Graph
-from repro.serve.common import (admit_pending, drain, latency_stats,
-                                trim_completed)
+from repro.serve.common import EngineBase, admit_pending
 
 
 @dataclass
 class GNNRequest:
-    """One node-prediction query (the GNN twin of engine.py's Request)."""
+    """One node-prediction query (the GNN twin of engine.py's Request).
+
+    ``status`` makes retirement explicit: ``done`` (``pred``/``logits``
+    are real) or ``shed`` (SLO admission dropped it — ``pred`` stays the
+    −1 sentinel and must not be read as a class).  ``partition`` is
+    stamped by the fabric router; −1 means not fabric-routed.
+    ``t_first`` is the slot-admission stamp (TTFT = queue wait for a
+    single-shot query)."""
     rid: int
-    node: int                          # global node id to classify
-    pred: int = -1                     # argmax class (filled at retire)
+    node: int                          # node id to classify (GLOBAL under
+    #                                    a fabric; engine-graph-local else)
+    pred: int = -1                     # argmax class (valid iff status=="done")
     logits: Optional[np.ndarray] = None  # (num_classes,) float32
+    status: str = "pending"            # pending | done | shed
+    partition: int = -1                # owning partition (fabric-routed)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
 
 
-class GNNInferenceEngine:
+class GNNInferenceEngine(EngineBase):
     """Continuous-batching node-prediction engine over a FeaturePlane.
 
     ``plane`` is intended to be the plane a trainer's pipeline built
@@ -69,34 +86,47 @@ class GNNInferenceEngine:
     def __init__(self, graph: Graph, cfg, params,
                  plane: Optional[FeaturePlane] = None, batch: int = 8,
                  weight_fn=None, seed: int = 0,
-                 keep_completed: int = 4096):
+                 keep_completed: int = 4096,
+                 node_map: Optional[np.ndarray] = None,
+                 retire_hook: Optional[Callable] = None):
         import jax
         from repro.models.gnn import gnn_forward
         self.graph = graph
         self.cfg = cfg
         self.params = params
-        self.batch = batch
+        # node_map: (N_global,) local id within `graph`, −1 if not owned
+        # here — a fabric replica serves global ids over its subgraph
+        self.node_map = (np.asarray(node_map, dtype=np.int32)
+                         if node_map is not None else None)
+        self._id_space = (len(self.node_map) if self.node_map is not None
+                          else graph.num_nodes)
+        owned = (int((self.node_map >= 0).sum())
+                 if self.node_map is not None else graph.num_nodes)
+        # seeds must be UNIQUE (the sampler's dedup/reindex invariant),
+        # so in-flight queries are distinct nodes — a pool larger than
+        # the servable node set could never fill
+        if batch > owned:
+            raise ValueError(f"batch {batch} exceeds the {owned}-node "
+                             f"servable set (in-flight seeds must be "
+                             f"distinct nodes)")
+        self._init_serving(batch, keep_completed, retire_hook)
+        self.running: Dict[int, GNNRequest] = {}   # slot -> request
+        # fixed per-level pad caps → ONE jit signature for this engine's
+        # forward, ever.  Walk outward from the seeds (the sampler's hop
+        # order): each hop's src set is its dst set plus ≤ fanout sampled
+        # neighbors per dst, and dedup bounds every level by the graph
+        # itself.  sizes order is input-hop first (batch_device_arrays).
+        caps = [batch]
+        for f in cfg.fanout:
+            caps.append(min(caps[-1] * (1 + f), graph.num_nodes))
+        caps.reverse()
+        self._level_caps = caps
         self.plane = (plane if plane is not None else
                       make_feature_plane(graph, None, cfg.sampling_device))
         self.sampler = NeighborSampler(graph, cfg.fanout,
                                        weight_fn=weight_fn, seed=seed)
         self._fwd = jax.jit(
             lambda p, feats, idxs: gnn_forward(p, feats, idxs, cfg))
-        self.pending: Deque[GNNRequest] = deque()
-        self.running: Dict[int, GNNRequest] = {}   # slot -> request
-        # retained result history is BOUNDED (an online engine must not
-        # grow per-query state forever); oldest entries are dropped
-        self.keep_completed = max(int(keep_completed), 1)
-        self.completed: List[GNNRequest] = []
-        self.total_completed = 0
-        self._free = deque(range(batch))
-        # seeds must be UNIQUE (the sampler's dedup/reindex invariant),
-        # so in-flight queries are distinct nodes — a pool larger than
-        # the graph could never fill
-        if batch > graph.num_nodes:
-            raise ValueError(f"batch {batch} exceeds the "
-                             f"{graph.num_nodes}-node graph (in-flight "
-                             f"seeds must be distinct nodes)")
         self.steps = 0
 
     @classmethod
@@ -116,48 +146,63 @@ class GNNInferenceEngine:
                    batch=batch, weight_fn=trainer.weight_fn, seed=seed)
 
     # ------------------------------------------------------------------
-    def submit(self, req: GNNRequest):
-        if not (0 <= req.node < self.graph.num_nodes):
+    # weight hand-off (trainer → replica, SNIPPETS §2 discipline): the
+    # exported tree swaps in whole, between steps — single-shot requests
+    # are computed inside one step, so none ever sees a partial refresh
+    # ------------------------------------------------------------------
+    def get_weights(self) -> Dict:
+        return {"params": self.params}
+
+    def set_weights(self, weights: Dict):
+        self.params = weights["params"]
+
+    # ------------------------------------------------------------------
+    def _validate(self, req: GNNRequest):
+        if not (0 <= req.node < self._id_space):
             raise ValueError(f"node {req.node} outside graph "
-                             f"[0, {self.graph.num_nodes})")
-        req.t_submit = time.perf_counter()
-        self.pending.append(req)
+                             f"[0, {self._id_space})")
+        if self.node_map is not None and self.node_map[req.node] < 0:
+            raise ValueError(f"node {req.node} is not owned by this "
+                             f"partition replica (route via the fabric)")
 
     def _try_allocate(self, req: GNNRequest) -> Optional[int]:
-        if not self._free:
+        free = self.free_slots()
+        if not free:
             return None
         if any(r.node == req.node for r in self.running.values()):
             # a same-node query is already in flight: seeds must stay
             # unique, so the FIFO head waits one engine iteration (the
             # in-flight twin retires at the end of this step)
             return None
-        return self._free.popleft()
+        return free[0]
 
-    def free_slots(self) -> List[int]:
-        return sorted(self._free)
-
-    def utilization(self) -> float:
-        return len(self.running) / max(self.batch, 1)
+    @staticmethod
+    def _on_admit(req: GNNRequest, slot: int):
+        req.t_first = time.perf_counter()      # TTFT = queue wait
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: admit, sample, gather (through the
         plane), forward, retire.  Returns completed-request count."""
-        admit_pending(self.pending, self.running, self._try_allocate)
+        admit_pending(self.pending, self.running, self._try_allocate,
+                      self._on_admit)
         if not self.running:
             return 0
         # one mini-batch over the ACTIVE seeds only — padding free slots
         # with real filler nodes would push phantom traffic through the
         # shared plane (polluting the trainer's CacheStats and, under
-        # FIFO, evicting warmed rows).  The seed level is exact in
-        # batch_device_arrays and upper hops are pow2-bucketed, so the
-        # jit signature varies over at most ``batch`` sizes.
+        # FIFO, evicting warmed rows).  inference_arrays pads every node
+        # level to this engine's fixed caps (padded rows reference only
+        # masked −1 neighbors), so the forward has ONE jit signature no
+        # matter how many seeds are admitted or what they sample.
         active_slots = sorted(self.running)
         seeds = np.array([self.running[s].node for s in active_slots],
                          dtype=np.int64)
+        if self.node_map is not None:
+            seeds = self.node_map[seeds].astype(np.int64)
         mb = self.sampler.sample(seeds)
         mb = generate_batch(mb, self.plane, self.graph)
-        arrays = inference_arrays(mb)
+        arrays = inference_arrays(mb, level_caps=self._level_caps)
         logits = np.asarray(self._fwd(self.params, arrays["features"],
                                       arrays["neigh_idxs"]),
                             dtype=np.float32)
@@ -167,29 +212,20 @@ class GNNInferenceEngine:
             req = self.running.pop(slot)
             req.logits = logits[i].copy()
             req.pred = int(np.argmax(req.logits))
-            req.t_first = req.t_done = now
-            self.completed.append(req)
-            self._free.append(slot)
+            req.t_done = now
+            self._retire(req)
             retired += 1
-        self.total_completed += retired
-        trim_completed(self.completed, self.keep_completed)
         self.steps += 1
         return retired
 
     # ------------------------------------------------------------------
-    def run_to_completion(self, max_iters: int = 10_000) -> Dict[str, float]:
-        """Drain the queue; every metric covers THIS call's window (the
-        requests completed and steps taken here), so repeated calls —
-        warmup, then a measured wave, then a streamed re-query — each get
-        self-consistent numbers.  Latency percentiles cover the window's
-        tail still inside the bounded ``keep_completed`` history."""
-        steps0 = self.steps
-        done, dt = drain(self, max_iters)
-        window = self.completed[-done:] if done else []
-        stats = {"completed": done, "seconds": dt,
-                 "queries_per_s": done / dt if dt else 0.0,
-                 "engine_steps": self.steps - steps0,
-                 **latency_stats(window)}
+    def _begin_window(self) -> Dict:
+        return {"steps": self.steps}
+
+    def _window_metrics(self, mark: Dict, emitted: int, done: int,
+                        dt: float) -> Dict[str, float]:
+        out = {"queries_per_s": done / dt if dt else 0.0,
+               "engine_steps": self.steps - mark["steps"]}
         if self.plane.stats is not None:
-            stats["cache_hit_rate"] = self.plane.stats.hit_rate
-        return stats
+            out["cache_hit_rate"] = self.plane.stats.hit_rate
+        return out

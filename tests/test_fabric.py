@@ -1,0 +1,309 @@
+"""Serving fabric: the ServingEngine contract, partition routing,
+replica weight refresh, SLO admission, and graceful degradation under
+saturation (the acceptance bar)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.a3gnn import A3GNNTrainer
+from repro.graph.partition import plan_partitions
+from repro.serve.common import (EngineBase, LatencyStats, LatencyWindow,
+                                ServingEngine, SLOAdmission, latency_stats)
+from repro.serve.engine import Engine, Request
+from repro.serve.fabric import ServingFabric
+from repro.serve.gnn_engine import GNNInferenceEngine, GNNRequest
+
+
+def _fresh_graph(seed=0, **kw):
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    return dataset_like(gnn_config("products", smoke=True, **kw), seed=seed)
+
+
+def _fabric(graph, cfg, params, parts=2, **kw):
+    plan = plan_partitions(graph, parts, "locality", seed=0, halo_budget=32)
+    return plan, ServingFabric.from_plan(graph, plan, cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the unified ServingEngine contract
+# ---------------------------------------------------------------------------
+
+def test_engines_and_fabric_conform_to_protocol(smoke_graph, smoke_gnn_cfg):
+    from repro.configs import get_config
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    gnn = GNNInferenceEngine.from_trainer(tr, batch=2, seed=0)
+    lm = Engine(get_config("llama3.2-3b", smoke=True), batch=2, max_len=32,
+                seed=0)
+    _, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2)
+    for eng in (gnn, lm, fab):
+        assert isinstance(eng, ServingEngine)
+        assert isinstance(eng, EngineBase)
+
+
+def test_no_engine_local_contract_copies():
+    """The concrete slot/drive machinery lives ONCE in EngineBase: an
+    engine redefining it is how drive loops drift apart.  (The fabric
+    legitimately overrides the slot views — they aggregate a fleet.)"""
+    for cls in (Engine, GNNInferenceEngine):
+        for name in ("free_slots", "utilization", "run_to_completion",
+                     "stats", "has_work"):
+            assert getattr(cls, name) is getattr(EngineBase, name), (
+                f"{cls.__name__}.{name} shadows EngineBase.{name}")
+        assert "drain" not in vars(cls)
+
+
+def test_fabric_is_dropin_for_one_engine(smoke_graph, smoke_gnn_cfg):
+    """A drive loop written against one engine runs the fleet unchanged."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    _, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2)
+    rng = np.random.default_rng(0)
+    for rid, v in enumerate(rng.choice(smoke_graph.num_nodes, 9,
+                                       replace=False)):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    stats = fab.run_to_completion()
+    assert stats["completed"] == 9
+    assert fab.utilization() == 0.0
+    assert len(fab.free_slots()) == fab.batch
+    assert isinstance(fab.stats(), LatencyStats)
+    for req in fab.completed:
+        assert req.status == "done"
+        assert 0 <= req.pred < smoke_graph.num_classes
+
+
+# ---------------------------------------------------------------------------
+# partition routing
+# ---------------------------------------------------------------------------
+
+def test_routing_follows_ownership(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    plan, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, parts=3,
+                        batch=2)
+    rng = np.random.default_rng(1)
+    nodes = rng.choice(smoke_graph.num_nodes, 30, replace=False)
+    for rid, v in enumerate(nodes):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    fab.run_to_completion()
+    expect = np.bincount(plan.owner_of(nodes), minlength=3)
+    assert fab.partition_completed() == list(expect)
+    for req in fab.completed:
+        assert req.partition == int(plan.owner_of([req.node])[0])
+
+
+def test_routing_isolates_partition_caches(smoke_graph, smoke_gnn_cfg):
+    """Queries for partition 0's nodes move ONLY partition 0's cache
+    accounting — the observable proof requests run against the owner's
+    plane, not the fleet's."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    plan, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2)
+    owned0 = np.where(plan.owner_of(np.arange(smoke_graph.num_nodes)) == 0)[0]
+    marks = []
+    for part in fab.engines:
+        st = part[0].plane.stats
+        marks.append(st.hits + st.misses)
+    for rid, v in enumerate(owned0[:8]):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    fab.run_to_completion()
+    st0 = fab.engines[0][0].plane.stats
+    st1 = fab.engines[1][0].plane.stats
+    assert st0.hits + st0.misses > marks[0]
+    assert st1.hits + st1.misses == marks[1]
+
+
+# ---------------------------------------------------------------------------
+# replication + weight refresh
+# ---------------------------------------------------------------------------
+
+def test_replicas_share_load_and_plane(smoke_graph, smoke_gnn_cfg):
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    _, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2,
+                     replicas=2)
+    assert len(fab.all_engines) == 4                     # 2 parts × 2 reps
+    for part in fab.engines:
+        assert part[0].plane is part[1].plane            # one warmed cache
+    rng = np.random.default_rng(2)
+    for rid, v in enumerate(rng.choice(smoke_graph.num_nodes, 16,
+                                       replace=False)):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    stats = fab.run_to_completion()
+    assert stats["completed"] == 16
+
+
+def test_weight_refresh_is_bitexact_and_drops_nothing(smoke_graph):
+    """Mid-serving refresh: logits after refresh_weights equal a fresh
+    engine's with the same tree, bit for bit, and every request admitted
+    before the refresh still retires done.  Full-neighborhood fanout
+    makes sampling deterministic, so logits depend only on params."""
+    from repro.configs.gnn import gnn_config
+    cfg = gnn_config("products", smoke=True).replace(fanout=(64, 64))
+    tr = A3GNNTrainer(smoke_graph, cfg, seed=0)
+    plan, fab = _fabric(smoke_graph, cfg, tr.params, batch=2, replicas=2)
+    probe = int(np.where(plan.owner_of(
+        np.arange(smoke_graph.num_nodes)) == 0)[0][0])
+
+    fab.submit(GNNRequest(rid=0, node=probe))
+    fab.run_to_completion()
+    before = fab.completed[-1].logits.copy()
+
+    # queue a burst, make partial progress, then refresh mid-serving
+    rng = np.random.default_rng(3)
+    for rid, v in enumerate(rng.choice(smoke_graph.num_nodes, 10,
+                                       replace=False)):
+        fab.submit(GNNRequest(rid=100 + rid, node=int(v)))
+    fab.step()
+    tr.run_epochs(1, max_steps_per_epoch=2)
+    fab.refresh_weights(tr.get_weights())
+    fab.run_to_completion()
+    assert fab.total_completed == 1 + 10               # none dropped
+    assert all(r.status == "done" for r in fab.completed)
+
+    fab.submit(GNNRequest(rid=1, node=probe))
+    fab.run_to_completion()
+    after = fab.completed[-1].logits
+
+    # reference: a fresh engine over the SAME partition subgraph (the
+    # halo budget truncates neighborhoods, so the full graph is not the
+    # comparable baseline) with the refreshed tree
+    ref = GNNInferenceEngine(plan.subgraphs[0], cfg,
+                             tr.get_weights()["params"], batch=2, seed=99,
+                             node_map=plan.node_maps()[0])
+    ref.submit(GNNRequest(rid=2, node=probe))
+    ref.run_to_completion()
+    assert np.array_equal(after, ref.completed[-1].logits)     # bit-exact
+    assert not np.array_equal(after, before)                   # and fresh
+
+
+def test_from_trainer_refresh_pulls_source(smoke_graph, smoke_gnn_cfg):
+    from repro.core.multipart import MultiPartitionTrainer
+    mp = MultiPartitionTrainer(smoke_graph,
+                               smoke_gnn_cfg.replace(partitions=2), seed=0)
+    fab = ServingFabric.from_trainer(mp, batch=2, seed=0)
+    mp.global_step()
+    fab.refresh_weights()                   # no args: pulls from the trainer
+    want = mp.get_weights()["params"]
+    import jax
+    for eng in fab.all_engines:
+        same = jax.tree_util.tree_all(jax.tree_util.tree_map(
+            lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)),
+            eng.params, want))
+        assert same
+
+
+# ---------------------------------------------------------------------------
+# SLO admission + shedding
+# ---------------------------------------------------------------------------
+
+def _fake_req(submit, first, done):
+    return GNNRequest(rid=-1, node=0, t_submit=submit, t_first=first,
+                      t_done=done)
+
+
+def test_slo_admission_verdicts():
+    win = LatencyWindow(64)
+    slo = SLOAdmission(10.0, win, slots=2)
+    assert slo.on_offer(100) == "admit"                # cold window: learn
+    for i in range(8):                                 # service ≈ 4 ms
+        win.record(_fake_req(i * 0.01, i * 0.01 + 0.001, i * 0.01 + 0.005))
+    assert slo.on_offer(0) == "admit"
+    assert slo.on_offer(50) == "shed"                  # 50·4/2 ≫ 10 ms
+    assert slo.on_dispatch(1.0, True) == "admit"
+    assert slo.on_dispatch(1.0, False) == "defer"
+    assert slo.on_dispatch(9.5, True) == "shed"        # age + service > slo
+    assert slo.offered == 3 and slo.shed == 2
+    assert slo.deferrals == 1
+    disabled = SLOAdmission(0.0, win, slots=2)
+    assert disabled.on_offer(10_000) == "admit"        # SLO off: defer-only
+
+
+def test_fabric_shed_is_explicit(smoke_graph, smoke_gnn_cfg):
+    """A shed request retires with status='shed' and the −1 pred
+    sentinel — never a fabricated prediction."""
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    _, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2,
+                     slo_p99_ms=5.0)
+    now = time.perf_counter()
+    for i in range(16):                                # service ≈ 20 ms
+        fab.window.record(_fake_req(now, now + 0.001, now + 0.021))
+    rng = np.random.default_rng(4)
+    for rid, v in enumerate(rng.choice(smoke_graph.num_nodes, 12,
+                                       replace=False)):
+        fab.submit(GNNRequest(rid=rid, node=int(v)))
+    assert fab.slo.shed > 0
+    for req in fab.shed_requests:
+        assert req.status == "shed"
+        assert req.pred == -1
+        assert req.logits is None
+    assert all(r.rid not in {s.rid for s in fab.shed_requests}
+               for r in fab.completed)
+
+
+@pytest.mark.slow
+def test_saturation_degrades_gracefully(smoke_graph, smoke_gnn_cfg):
+    """Past saturation: shed fraction rises monotonically with offered
+    load while every ADMITTED request's queue age stays inside the SLO
+    envelope (age + service ≤ target at dispatch — the bound the door
+    enforces)."""
+    slo_ms = 5.0
+    tr = A3GNNTrainer(smoke_graph, smoke_gnn_cfg, seed=0)
+    _, fab = _fabric(smoke_graph, smoke_gnn_cfg, tr.params, batch=2,
+                     slo_p99_ms=0.0)
+    rng = np.random.default_rng(5)
+    pool = rng.choice(smoke_graph.num_nodes, 160, replace=False)
+    for w in range(3):                                 # warm: compile + regime
+        for rid, v in enumerate(pool[:16]):
+            fab.submit(GNNRequest(rid=-100 * w - rid, node=int(v)))
+        fab.run_to_completion()
+
+    fab.slo.slo_p99_ms = slo_ms
+    fractions = []
+    for burst in (4, 32, 128):                         # rising offered load
+        mark_off, mark_shed = fab.slo.offered, fab.slo.shed
+        for rid, v in enumerate(pool[:burst]):
+            fab.submit(GNNRequest(rid=1000 * burst + rid, node=int(v)))
+        fab.run_to_completion()
+        off = fab.slo.offered - mark_off
+        fractions.append((fab.slo.shed - mark_shed) / off)
+    assert fractions == sorted(fractions)              # monotone degradation
+    assert fractions[-1] > 0.0
+    done = [r for r in fab.completed if r.rid >= 0]
+    assert done
+    for req in done:                                   # bounded queue age
+        assert (req.t_first - req.t_submit) * 1e3 <= slo_ms + 500.0
+
+
+# ---------------------------------------------------------------------------
+# latency accounting
+# ---------------------------------------------------------------------------
+
+def test_latency_window_rolls_and_memoizes():
+    win = LatencyWindow(4)
+    for i in range(6):
+        win.record(_fake_req(float(i), i + 0.010, i + 0.030))
+    assert len(win) == 4                               # oldest evicted
+    st = win.stats()
+    assert st is win.stats()                           # memoized between records
+    assert st.window == 4
+    assert st.ttft_p50_ms == pytest.approx(10.0, rel=1e-6)
+    assert st.p50_ms == pytest.approx(30.0, rel=1e-6)
+    assert st.service_p50_ms == pytest.approx(20.0, rel=1e-6)
+    win.record(_fake_req(9.0, 9.1, 9.2))
+    assert win.stats() is not st                       # record invalidates
+    win.reset()
+    assert win.stats() == LatencyStats()
+
+
+def test_latency_stats_typed_and_dict_shape():
+    reqs = [_fake_req(0.0, 0.010, 0.020), _fake_req(0.0, 0.020, 0.100)]
+    st = latency_stats(reqs)
+    assert isinstance(st, LatencyStats)
+    d = st.asdict()
+    assert set(d) == {"p50_ms", "p99_ms", "ttft_p50_ms", "ttft_p99_ms",
+                      "service_p50_ms", "qps", "window"}
+    assert d["window"] == 2
+    assert latency_stats([]) == LatencyStats()
+
+    lm_req = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                     max_new_tokens=1)
+    lm_req.t_submit, lm_req.t_first, lm_req.t_done = 0.0, 0.005, 0.015
+    assert latency_stats([lm_req]).ttft_p50_ms == pytest.approx(5.0)

@@ -102,7 +102,7 @@ def test_admission_seam_shared_semantics():
     # no capacity → head blocks, nothing admitted
     assert admit_pending(pending, running, lambda r: None) == 0
     assert list(pending) == ["c"]
-    assert latency_stats([])["p50_ms"] == 0.0
+    assert latency_stats([]).p50_ms == 0.0     # typed, zeroed empty window
 
 
 def test_admission_order_is_submission_order():
