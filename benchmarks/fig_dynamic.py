@@ -1,0 +1,112 @@
+"""Dynamic graphs: cut-fraction drift vs. edges streamed, and the cost of
+incremental re-balancing vs. a full repartition.
+
+Two sweeps on the synthetic products twin:
+
+  * **drift** — stream random edge batches into a partitioned graph and
+    track how far the assignment's cut fraction degrades past the
+    plan-time baseline (the signal `MultiPartitionTrainer.cut_drift`
+    triggers on);
+  * **rebalance** — at each drift point, compare `incremental_rebalance`
+    (boundary-node migration) against a from-scratch locality partition
+    of the mutated graph: wall-clock cost, fraction of nodes moved, and
+    how close the incremental cut gets to the fresh one.  The committed
+    artifact records the acceptance envelope: < 25% of nodes moved and
+    cut fraction within 10% of fresh.
+
+Also times the overlay's adjacency costs: mutation + first merged-view
+build vs. `compact()` (amortization argument for lazy merging).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, bench_gnn_cfg
+from repro.graph.partition import (assignment_cut_fraction,
+                                   incremental_rebalance, plan_partitions)
+from repro.graph.synthetic import dataset_like
+
+PARTS = 4
+STREAM_BATCHES = (1000, 2000, 4000, 8000)
+
+
+def run(quick: bool = False):
+    cfg = bench_gnn_cfg("products")
+    if quick:
+        cfg = cfg.replace(num_nodes=3_000, num_edges=40_000)
+    rng = np.random.default_rng(0)
+
+    results = {"parts": PARTS, "drift": {}, "rebalance": {}, "overlay": {}}
+    base_graph = dataset_like(cfg, seed=0)
+    plan0 = plan_partitions(base_graph, PARTS, "locality", seed=0)
+    cut0 = assignment_cut_fraction(base_graph, plan0.owner)
+    results["cut_baseline"] = cut0
+
+    for n_stream in STREAM_BATCHES:
+        g = dataset_like(cfg, seed=0)
+        g.add_edges(rng.integers(0, g.num_nodes, n_stream),
+                    rng.integers(0, g.num_nodes, n_stream))
+        cut_drifted = assignment_cut_fraction(g, plan0.owner)
+        results["drift"][n_stream] = {
+            "cut_fraction": cut_drifted,
+            "drift": cut_drifted - cut0,
+        }
+        emit(f"dynamic/drift_e{n_stream}", 0.0,
+             f"cut={cut_drifted:.4f} (+{cut_drifted - cut0:.4f})")
+
+        t0 = time.perf_counter()
+        res = incremental_rebalance(g, plan0)
+        t_inc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fresh = plan_partitions(g, PARTS, "locality", seed=0)
+        t_full = time.perf_counter() - t0
+        fresh_cut = assignment_cut_fraction(g, fresh.owner)
+        results["rebalance"][n_stream] = {
+            "moved_nodes": res.moved_nodes,
+            "moved_frac": res.moved_frac,
+            "cut_before": res.cut_before,
+            "cut_after": res.cut_after,
+            "cut_fresh": fresh_cut,
+            "cut_vs_fresh": res.cut_after / max(fresh_cut, 1e-12),
+            "incremental_s": t_inc,
+            "full_repartition_s": t_full,
+            "speedup": t_full / max(t_inc, 1e-12),
+            "meets_envelope": bool(res.moved_frac < 0.25
+                                   and res.cut_after <= fresh_cut * 1.10),
+        }
+        emit(f"dynamic/rebalance_e{n_stream}", t_inc * 1e6,
+             f"moved={res.moved_frac:.3f} cut {res.cut_before:.4f}->"
+             f"{res.cut_after:.4f} (fresh {fresh_cut:.4f}) "
+             f"{t_full / max(t_inc, 1e-12):.1f}x faster than full")
+
+    # overlay mechanics: merge build vs. compaction fold
+    g = dataset_like(cfg, seed=0)
+    n_mut = STREAM_BATCHES[-1]
+    t0 = time.perf_counter()
+    g.add_edges(rng.integers(0, g.num_nodes, n_mut),
+                rng.integers(0, g.num_nodes, n_mut))
+    t_mutate = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g.adj()                                     # first merged-view build
+    t_merge = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g.adj()                                     # memoized
+    t_memo = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g.compact()
+    t_compact = time.perf_counter() - t0
+    results["overlay"] = {
+        "mutations": n_mut,
+        "mutate_s": t_mutate,
+        "merge_s": t_merge,
+        "memoized_s": t_memo,
+        "compact_s": t_compact,
+    }
+    emit(f"dynamic/overlay_m{n_mut}", t_merge * 1e6,
+         f"mutate={t_mutate*1e3:.1f}ms merge={t_merge*1e3:.1f}ms "
+         f"memoized={t_memo*1e6:.0f}us compact={t_compact*1e3:.1f}ms")
+
+    save_json("fig_dynamic", results)
+    return results

@@ -19,11 +19,14 @@
 #          (also part of the fast job, as its own JUnit artifact).
 #   fast:  everything except tests marked `slow` — the sub-minute signal
 #          for every push; this is where the serving-engine tests
-#          (tests/test_gnn_serve.py) and the serving-fabric tests
+#          (tests/test_gnn_serve.py), the serving-fabric tests
 #          (tests/test_fabric.py — ServingEngine conformance, partition
 #          routing, replica weight refresh, SLO shedding; the saturation
-#          sweep is `slow`-marked and runs in `full`) run.  The CI fast
-#          job does NOT
+#          sweep is `slow`-marked and runs in `full`) and the
+#          dynamic-graph differential harness (tests/test_dynamic_graph.py
+#          — delta-CSR overlay vs. compacted sampling parity, incremental
+#          re-balance, topology-consistent serving; the long interleaving
+#          sweep is `slow`-marked) run.  The CI fast job does NOT
 #          install `hypothesis`, keeping the tests/_hypothesis_compat.py
 #          shim path covered.  The kernel/plane/streaming files are
 #          skipped here (the kernels lane owns them) so the fast job

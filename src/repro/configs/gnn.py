@@ -101,6 +101,13 @@ class GNNConfig:
     # steps WHEN stale (a FeatureStore update touched a halo-resident row);
     # 0 → no periodic refresh (explicit refresh_halo_features() only)
     halo_refresh_interval: int = 0
+    # dynamic topology: cut-fraction drift past the plan-time baseline that
+    # triggers an incremental re-balance between global steps (boundary-
+    # node migration, never a full repartition); ≤ 0 disables the trigger
+    # (explicit rebalance_partitions() only)
+    rebalance_drift: float = 0.0
+    # cap on the fraction of nodes one incremental re-balance may migrate
+    rebalance_max_move: float = 0.25
     # --- serving (serve/fabric.py) ---
     # target p99 end-to-end latency for SLO-aware admission; ≤ 0 disables
     # shedding (unconditional admission — queue wait unbounded past

@@ -151,6 +151,14 @@ class FeatureCache:
         delegate here.  Returns the number of resident rows patched."""
         if not self.capacity:
             return 0
+        ids = np.asarray(ids, dtype=np.int64)
+        # ids outside this cache's node universe (a full-graph stream
+        # hitting a subgraph cache) have no slot here — not-resident, not
+        # an indexing error
+        in_universe = ids < len(self.device_map)
+        if not in_universe.all():
+            ids = ids[in_universe]
+            rows = np.asarray(rows)[in_universe]
         slots = self.device_map[ids]
         hit = slots >= 0
         if hit.any():

@@ -171,11 +171,19 @@ class FeaturePlane:
     def _on_store_update(self, ids: np.ndarray, rows: np.ndarray):
         """Store subscriber: the store wrote the host rows already, so
         only resident copies need patching (version bump → mirror
-        re-sync) — no redundant host-store rewrite per subscribed plane."""
+        re-sync) — no redundant host-store rewrite per subscribed plane.
+        A plane over a SUBGRAPH may be subscribed to a full-graph store
+        (a fabric replica's plane, a test rig); ids outside this plane's
+        node universe have no copy here and are dropped, not an error."""
         c = self.cache
         if c is not None:
-            c.patch_resident(np.asarray(ids, dtype=np.int64),
-                             np.asarray(rows, dtype=np.float32))
+            ids = np.asarray(ids, dtype=np.int64)
+            rows = np.asarray(rows, dtype=np.float32)
+            in_universe = ids < self.graph.num_nodes
+            if not in_universe.all():
+                ids, rows = ids[in_universe], rows[in_universe]
+            if len(ids):
+                c.patch_resident(ids, rows)
 
     def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
         """Overwrite feature rows ``ids`` in the host store, propagating to

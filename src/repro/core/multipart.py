@@ -52,7 +52,9 @@ from repro.core.pipeline import Pipeline, PipelineStats
 from repro.core.sampling import NeighborSampler, seed_loader
 from repro.distributed.collectives import grad_allreduce, halo_all_to_all
 from repro.graph.batch import generate_batch, batch_device_arrays
-from repro.graph.partition import PartitionPlan, plan_partitions
+from repro.graph.partition import (PartitionPlan, RebalanceResult,
+                                   assignment_cut_fraction,
+                                   incremental_rebalance, plan_partitions)
 from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.launch.mesh import make_partition_mesh
 from repro.models.gnn import (decls_gnn, make_apply_fn, make_eval_fn,
@@ -243,6 +245,12 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         # streaming-update state (attach_feature_store)
         self.halo_refreshes = 0
         self._halo_dirty = False
+        # dynamic-topology state: cut fraction at plan build (the drift
+        # baseline) + rebalance accounting
+        self._plan_cut_fraction = assignment_cut_fraction(graph,
+                                                          self.plan.owner)
+        self.rebalances = 0
+        self.last_rebalance: Optional[RebalanceResult] = None
 
     # ------------------------------------------------------------------
     def _fill_halo_features(self) -> int:
@@ -402,9 +410,63 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.global_steps += 1
         self._maybe_refresh_halo()
 
+    # ------------------------------------------------------------------
+    # dynamic topology: cut-fraction drift tracking + incremental rebalance
+    # ------------------------------------------------------------------
+    def cut_drift(self) -> float:
+        """How much the live cut fraction has degraded past the plan-time
+        baseline: ``assignment_cut_fraction`` of the CURRENT adjacency
+        (overlay included) minus the fraction at plan build.  0 while the
+        graph's ``topology_version`` still matches the plan's (the cheap
+        guard — no edge scan unless topology actually moved)."""
+        if self.full_graph.topology_version == self.plan.topology_version:
+            return 0.0
+        cur = assignment_cut_fraction(self.full_graph, self.plan.owner)
+        return max(cur - self._plan_cut_fraction, 0.0)
+
+    def rebalance_partitions(self, pipe: Optional[MultiPipeline] = None,
+                             max_move_frac: Optional[float] = None
+                             ) -> RebalanceResult:
+        """Incremental re-balance after topology drift: migrate boundary
+        nodes only (``graph/partition.py:incremental_rebalance``), then
+        rebuild the per-partition slots through the same in-place
+        reconfigure discipline as ``set_halo_budget`` — drain, shutdown,
+        new plan, new slots, halo refill.  Params and optimizer state are
+        untouched (they are partition-independent); cache and halo
+        accounting start FRESH because node ownership moved — the same
+        invariant ``_after_restore`` enforces across a partition-count
+        migration."""
+        if max_move_frac is None:
+            max_move_frac = getattr(self.cfg, "rebalance_max_move", 0.25)
+        if pipe is not None:
+            pipe.drain()
+        for slot in self.slots:
+            slot.pipe.shutdown()
+        res = incremental_rebalance(self.full_graph, self.plan,
+                                    max_move_frac=float(max_move_frac))
+        self.plan = res.plan
+        self.slots = [self._make_slot(p, sub) for p, sub in
+                      enumerate(self.plan.subgraphs)]
+        self.halo_exchange_bytes = self._fill_halo_features()
+        self._halo_dirty = False         # every halo row was just refilled
+        self._plan_cut_fraction = res.cut_after
+        self.eta = float(np.mean(self.plan.etas(self.full_graph)))
+        self.rebalances += 1
+        self.last_rebalance = res
+        return res
+
+    def _maybe_rebalance(self):
+        """Drift trigger, checked between global steps (never mid-window:
+        ``MultiPipeline.run`` holds submitted batches in the slot pipes,
+        and a rebalance replaces those pipes)."""
+        thresh = getattr(self.cfg, "rebalance_drift", 0.0)
+        if thresh > 0 and self.cut_drift() > thresh:
+            self.rebalance_partitions()
+
     def global_step(self, fail_worker: Optional[int] = None):
         """One gradient-synchronized step: each partition samples + batches
         one mini-batch from its own subgraph through its own pipeline."""
+        self._maybe_rebalance()
         for slot in self.slots:
             slot.pipe.submit([self._next_seeds(slot)],
                              fail_worker=(fail_worker if slot.index == 0
@@ -687,6 +749,8 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         return {**super().checkpoint_extra(),
                 "partition_method": self.plan.method,
                 "halo_budget": int(self.plan.halo_budget),
+                "topology_version": int(self.plan.topology_version),
+                "rebalances": int(self.rebalances),
                 "cache_stats": [dataclasses.asdict(s.cache.stats)
                                 if s.cache is not None else None
                                 for s in self.slots],
@@ -695,6 +759,7 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
 
     def _after_restore(self, extra: Dict, step: int):
         self.global_steps = int(extra.get("global_steps", step))
+        self.rebalances = int(extra.get("rebalances", 0))
         # cache/halo hit-accounting carries over only on a same-topology
         # restore (after a migration the per-partition objects are new)
         if int(extra.get("partitions", self.plan.parts)) == self.plan.parts:

@@ -76,6 +76,9 @@ class MiniBatch:
     # dst-prefix rows and the masked neighbor mean, both (n_dst0, F)
     fused_h_dst: Optional[np.ndarray] = None
     fused_agg: Optional[np.ndarray] = None
+    # graph topology version the batch was sampled at (dynamic graphs:
+    # lets downstream consumers detect batches drawn before a mutation)
+    topology_version: int = -1
 
     def num_input_nodes(self) -> int:
         return len(self.input_ids)
@@ -100,10 +103,15 @@ class NeighborSampler:
     def _sample_one_hop(self, dst_ids: np.ndarray, fanout: int) -> np.ndarray:
         """Returns sampled (n_dst, fanout) global ids with -1 pad."""
         g = self.g
+        # both paths read through the merged base+overlay view, so edge
+        # mutations are visible to the very next hop; for a frozen graph
+        # adj() returns the base arrays untouched (bit-exact with the old
+        # direct reads)
+        indptr, indices = g.adj()
         out = -np.ones((len(dst_ids), fanout), dtype=np.int64)
         if self.use_reference:
             for i, v in enumerate(dst_ids):
-                nb = g.indices[g.indptr[v]:g.indptr[v + 1]]
+                nb = indices[indptr[v]:indptr[v + 1]]
                 if len(nb) == 0:
                     continue
                 w = (np.ones(len(nb)) if self.weight_fn is None
@@ -116,8 +124,8 @@ class NeighborSampler:
         # BUCKETED batched top-m (rows grouped by padded width) — all work is
         # large numpy ops that release the GIL, so sampler threads scale
         # (the host-side twin of the kernels/reservoir TPU formulation).
-        starts = g.indptr[dst_ids]
-        ends = g.indptr[dst_ids + 1]
+        starts = indptr[dst_ids]
+        ends = indptr[dst_ids + 1]
         sizes = (ends - starts).astype(np.int64)
         total = int(sizes.sum())
         if total == 0:
@@ -125,7 +133,7 @@ class NeighborSampler:
         row_start = np.cumsum(sizes) - sizes
         offs = np.repeat(starts, sizes) + (np.arange(total)
                                            - np.repeat(row_start, sizes))
-        nb_all = g.indices[offs]
+        nb_all = indices[offs]
 
         # rows with ≤ fanout neighbors: take everything (no keys needed)
         small = sizes <= fanout
@@ -188,7 +196,8 @@ class NeighborSampler:
             dst = src_ids
         blocks.reverse()                      # input hop first
         return MiniBatch(blocks=blocks, input_ids=blocks[0].src_ids,
-                         seeds=seeds, labels=self.g.labels[seeds])
+                         seeds=seeds, labels=self.g.labels[seeds],
+                         topology_version=self.g.topology_version)
 
 
 def seed_loader(graph: Graph, batch_size: int, seed: int = 0,

@@ -94,6 +94,9 @@ def batch_device_arrays(mb: MiniBatch, pad_seed_level: bool = False,
         "neigh_idxs": neigh_idxs,
         "labels": mb.labels.astype(np.int32),
         "sizes": sizes,
+        # sampled-at topology version rides along (dynamic graphs:
+        # consumers can audit which adjacency a batch was drawn from)
+        "topology_version": mb.topology_version,
     }
     if mb.fused_agg is not None:
         # fused batch generation: layer-0 pre-aggregates replace the

@@ -160,6 +160,9 @@ class PartitionPlan:
     halo_ranked: List[np.ndarray] = field(default_factory=list, repr=False)
     halo_ranked_aff: List[np.ndarray] = field(default_factory=list,
                                               repr=False)
+    # graph topology version the plan was built against (dynamic graphs:
+    # drift tracking compares the live graph's version to this one)
+    topology_version: int = 0
     # lazy (N,) owned-local index (ownership lookup API) — one shared map
     # next to ``owner``, not a per-partition N-map, so routing costs O(N)
     # memory once, not P×N
@@ -249,12 +252,13 @@ def _halo_candidates(g: Graph, owner: np.ndarray, parts: int):
     keeps a strict prefix-superset of a smaller one.  ``halo_counts``
     stays the full either-direction candidate pool (the remote-fetch
     statistic the PR 2 plan reported)."""
-    src = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
-    cross = owner[src] != owner[g.indices]
+    indptr, indices = g.adj()
+    src = np.repeat(np.arange(g.num_nodes), np.diff(indptr))
+    cross = owner[src] != owner[indices]
     ranked, affs, counts = [], [], []
     for p in range(parts):
-        out_nb = g.indices[cross & (owner[src] == p)]     # owned → remote
-        in_src = src[cross & (owner[g.indices] == p)]     # remote → owned
+        out_nb = indices[cross & (owner[src] == p)]       # owned → remote
+        in_src = src[cross & (owner[indices] == p)]       # remote → owned
         ids, aff = np.unique(out_nb, return_counts=True)
         order = np.lexsort((ids, -aff))
         ranked.append(ids[order].astype(np.int64))
@@ -282,7 +286,8 @@ def _finalize_plan(g: Graph, node_sets: List[np.ndarray], owner: np.ndarray,
                    for ns, hs in zip(node_sets, halo_sets)],
         cut_edges=cut, halo_counts=counts, halo_budget=budget,
         halo_sets=halo_sets, recovered_edges=recovered,
-        halo_ranked=ranked, halo_ranked_aff=affs)
+        halo_ranked=ranked, halo_ranked_aff=affs,
+        topology_version=g.topology_version)
 
 
 def plan_partitions(g: Graph, parts: int, method: str = "locality",
@@ -297,6 +302,113 @@ def plan_partitions(g: Graph, parts: int, method: str = "locality",
     for p, ns in enumerate(node_sets):
         owner[ns] = p
     return _finalize_plan(g, node_sets, owner, method, halo_budget)
+
+
+def assignment_cut_fraction(g: Graph, owner: np.ndarray) -> float:
+    """Fraction of CURRENT edges crossing a partition boundary under an
+    ownership vector — the drift statistic: computed against ``g.adj()``
+    so streamed edge inserts/deletes move it even while ``plan.cut_edges``
+    (frozen at plan-build) does not."""
+    indptr, indices = g.adj()
+    src = np.repeat(np.arange(g.num_nodes), np.diff(indptr))
+    return float((owner[src] != owner[indices]).sum() / max(len(indices), 1))
+
+
+@dataclass
+class RebalanceResult:
+    """Outcome of one ``incremental_rebalance`` call."""
+    plan: PartitionPlan
+    moved_nodes: int                # boundary nodes migrated
+    moved_frac: float               # moved_nodes / N
+    cut_before: float               # cut fraction entering the rebalance
+    cut_after: float                # cut fraction of the new assignment
+    sweeps: int                     # refinement sweeps executed
+
+
+def incremental_rebalance(g: Graph, plan: PartitionPlan,
+                          halo_budget: Optional[int] = None,
+                          max_move_frac: float = 0.25,
+                          balance_slack: float = 0.10,
+                          max_sweeps: int = 8) -> RebalanceResult:
+    """Restore partition quality after topology drift by migrating ONLY
+    boundary nodes — never a full repartition (HitGNN's CPU-side
+    preprocessing is the scalability bottleneck; re-running it per drift
+    event is exactly what this avoids).
+
+    Greedy gain refinement over the CURRENT adjacency (``g.adj()``, so
+    pending overlay edges count): per node, ``aff[v, p]`` = incident
+    edges (either direction — cut edges hurt both endpoints' partitions)
+    landing in partition p; a boundary node moves to its best partition
+    when the gain ``aff[v, best] - aff[v, own]`` is positive and the
+    size-balance slack allows it, and its neighbors' affinities update
+    incrementally.  Total moves are capped at ``max_move_frac·N`` — the
+    incremental-vs-full contract benchmarked in fig_dynamic.  The
+    returned plan is rebuilt through ``_finalize_plan`` on the new node
+    sets, so subgraphs, halo sets and ``kept_information`` are recomputed
+    against the mutated graph, never carried stale."""
+    n = g.num_nodes
+    parts = plan.parts
+    owner = plan.owner.copy()
+    indptr, indices = g.adj()
+    cut_before = assignment_cut_fraction(g, owner)
+    budget = plan.halo_budget if halo_budget is None else int(halo_budget)
+
+    src = np.repeat(np.arange(n), np.diff(indptr)).astype(np.int64)
+    aff = np.zeros((n, parts), np.int64)
+    np.add.at(aff, (src, owner[indices]), 1)          # out-edges of src
+    np.add.at(aff, (indices, owner[src]), 1)          # in-edges of dst
+    # reverse CSR: in-neighbors of v, for incremental aff updates on move
+    rev_order = np.argsort(indices, kind="stable")
+    rev_src = src[rev_order]
+    rev_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(indices, minlength=n), out=rev_indptr[1:])
+
+    sizes = np.bincount(owner, minlength=parts).astype(np.int64)
+    target = n / parts
+    lo = int(np.floor(target * (1.0 - balance_slack)))
+    hi = int(np.ceil(target * (1.0 + balance_slack)))
+    move_budget = int(max_move_frac * n)
+    moved_total = 0
+    sweeps = 0
+    while sweeps < max_sweeps and moved_total < move_budget:
+        sweeps += 1
+        best = np.argmax(aff, axis=1)
+        own_aff = aff[np.arange(n), owner]
+        gain = aff[np.arange(n), best] - own_aff
+        cand = np.where((gain > 0) & (best != owner))[0]
+        if not len(cand):
+            break
+        moved_this_sweep = 0
+        # biggest gains first: the move budget goes to the worst offenders
+        for v in cand[np.argsort(-gain[cand], kind="stable")]:
+            if moved_total >= move_budget:
+                break
+            p_from, p_to = int(owner[v]), int(np.argmax(aff[v]))
+            if p_to == p_from or aff[v, p_to] <= aff[v, p_from]:
+                continue                      # stale after earlier moves
+            if sizes[p_from] - 1 < lo or sizes[p_to] + 1 > hi:
+                continue
+            owner[v] = p_to
+            sizes[p_from] -= 1
+            sizes[p_to] += 1
+            moved_total += 1
+            moved_this_sweep += 1
+            out_nb = indices[indptr[v]:indptr[v + 1]]
+            in_nb = rev_src[rev_indptr[v]:rev_indptr[v + 1]]
+            for nb in (out_nb, in_nb):
+                if len(nb):
+                    np.add.at(aff, (nb, p_from), -1)
+                    np.add.at(aff, (nb, p_to), 1)
+        if not moved_this_sweep:
+            break
+    node_sets = [np.where(owner == p)[0].astype(np.int32)
+                 for p in range(parts)]
+    new_plan = _finalize_plan(g, node_sets, owner, plan.method, budget)
+    return RebalanceResult(plan=new_plan, moved_nodes=moved_total,
+                           moved_frac=moved_total / max(n, 1),
+                           cut_before=cut_before,
+                           cut_after=assignment_cut_fraction(g, owner),
+                           sweeps=sweeps)
 
 
 def partition(g: Graph, parts: int, method: str = "bfs",
@@ -314,4 +426,5 @@ def overlap_ratio(part: Graph, full: Graph) -> float:
 
 __all__ = ["hash_partition", "bfs_partition", "locality_partition",
            "PartitionPlan", "plan_partitions", "partition", "overlap_ratio",
-           "edge_locality_score"]
+           "edge_locality_score", "assignment_cut_fraction",
+           "incremental_rebalance", "RebalanceResult"]

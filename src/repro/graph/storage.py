@@ -6,17 +6,69 @@ Degree ("hotness") statistics drive the static cache policy (PaGraph-style).
 ``FeatureStore`` is the streaming write path over that row store: versioned
 row updates fanned out to every derived copy (caches, device mirrors, halo
 rows) so trainers and the serving engine observe feature drift coherently.
+
+DYNAMIC TOPOLOGY (delta-CSR overlay): production graphs gain and lose
+edges continuously, and the paper's CPU-side preprocessing is exactly the
+path that must NOT be re-run per edge (HitGNN's scalability bottleneck).
+``Graph.add_edges`` / ``Graph.remove_edges`` record mutations in a
+``DeltaOverlay`` next to the frozen base CSR; every adjacency consumer
+(``neighbors``, ``degrees``, ``subgraph``, the ``core/sampling.py``
+samplers, the partitioner's cut scan) reads through ``Graph.adj()`` — the
+merged base+overlay view, memoized per ``topology_version`` so the merge
+costs one O(E) pass per mutation batch, not one per sample.  A periodic
+``compact()`` folds the overlay into the base CSR WITHOUT changing
+``topology_version`` — compaction is a layout change, not a topology
+change, which is what makes "sampling over base+overlay is bit-exact with
+sampling over the compacted CSR at the same seed and version" a testable
+invariant (tests/test_dynamic_graph.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
 
 import numpy as np
 
 
+class DeltaOverlay:
+    """Pending edge mutations over a frozen base CSR (delta-CSR).
+
+    Semantics are SET-like per directed edge ``(src, dst)``: inserting an
+    edge that is already live (in the kept base or the overlay) is a no-op
+    (duplicate-edge insert), and removing one deletes every live copy —
+    so a double-delete is idempotent.  Base-edge removals are a boolean
+    ``kept`` mask over the base ``indices`` array; insertions append to a
+    per-source list in arrival order.  The merged per-row neighbor order
+    is therefore *kept base order, then insertion order* — the one
+    ordering contract ``Graph.adj()``, ``Graph.compact()`` and the
+    differential reference model in tests/test_dynamic_graph.py all
+    share (neighbor order feeds the sampler's rng stream, so the order IS
+    the bit-exactness contract)."""
+
+    def __init__(self, num_base_edges: int):
+        self.kept: Optional[np.ndarray] = None   # lazy (E_base,) bool
+        self.added: dict = {}                    # src -> [dst, ...] arrival order
+        self.added_set: set = set()              # {(src, dst)} live overlay edges
+        self.n_removed_base = 0                  # base copies masked out
+        self._num_base_edges = num_base_edges
+
+    @property
+    def n_added(self) -> int:
+        return len(self.added_set)
+
+    @property
+    def empty(self) -> bool:
+        return not self.added_set and self.n_removed_base == 0
+
+    def ensure_kept(self) -> np.ndarray:
+        if self.kept is None:
+            self.kept = np.ones(self._num_base_edges, bool)
+        return self.kept
+
+
 @dataclass
 class Graph:
-    indptr: np.ndarray          # (N+1,) int64
+    indptr: np.ndarray          # (N+1,) int64 — BASE CSR (frozen between compactions)
     indices: np.ndarray         # (E,) int32 — neighbor lists, CSR
     features: np.ndarray        # (N, F) float32
     labels: np.ndarray          # (N,) int32
@@ -24,6 +76,15 @@ class Graph:
     val_mask: np.ndarray
     test_mask: np.ndarray
     name: str = "graph"
+    # dynamic topology: monotone version (bumps once per mutating
+    # add_edges/remove_edges call that changed the edge set; compact()
+    # preserves it) + the pending delta overlay and the memoized merged view
+    topology_version: int = 0
+    _overlay: Optional[DeltaOverlay] = field(default=None, repr=False,
+                                             compare=False)
+    _adj_cache: Optional[Tuple[np.ndarray, np.ndarray]] = field(
+        default=None, repr=False, compare=False)
+    _adj_cache_version: int = field(default=-1, repr=False, compare=False)
 
     @property
     def num_nodes(self) -> int:
@@ -31,7 +92,10 @@ class Graph:
 
     @property
     def num_edges(self) -> int:
-        return len(self.indices)
+        ov = self._overlay
+        if ov is None or ov.empty:
+            return len(self.indices)
+        return len(self.indices) - ov.n_removed_base + ov.n_added
 
     @property
     def feat_dim(self) -> int:
@@ -49,10 +113,161 @@ class Graph:
         return self.num_edges / max(self.num_nodes, 1)
 
     def degrees(self) -> np.ndarray:
-        return np.diff(self.indptr).astype(np.int64)
+        return np.diff(self.adj()[0]).astype(np.int64)
 
     def neighbors(self, v: int) -> np.ndarray:
-        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+        indptr, indices = self.adj()
+        return indices[indptr[v]:indptr[v + 1]]
+
+    # ------------------------------------------------------------------
+    # dynamic topology: delta-CSR overlay (add/remove/compact + merged view)
+    # ------------------------------------------------------------------
+    @property
+    def has_overlay(self) -> bool:
+        """True when uncompacted mutations are pending."""
+        return self._overlay is not None and not self._overlay.empty
+
+    def adj(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The CURRENT adjacency as ``(indptr, indices)`` — the base CSR
+        when no mutations are pending, otherwise the merged base+overlay
+        view.  This is THE read every adjacency consumer goes through
+        (samplers, partitioner, ``subgraph``), so a mutation is visible to
+        the very next sample.  The merge is memoized per
+        ``topology_version``: one O(E) pass per mutation batch, amortized
+        across every sample drawn at that version.  Callers must treat
+        the returned arrays as read-only."""
+        ov = self._overlay
+        if ov is None or ov.empty:
+            return self.indptr, self.indices
+        if (self._adj_cache is not None
+                and self._adj_cache_version == self.topology_version):
+            return self._adj_cache
+        self._adj_cache = self._merge_overlay(ov)
+        self._adj_cache_version = self.topology_version
+        return self._adj_cache
+
+    def _merge_overlay(self, ov: DeltaOverlay):
+        """Materialize the merged view: per row, kept base neighbors (in
+        base order) followed by overlay insertions (in arrival order)."""
+        n = self.num_nodes
+        if ov.kept is not None and ov.n_removed_base:
+            keep = ov.kept
+            cum = np.zeros(len(self.indices) + 1, np.int64)
+            np.cumsum(keep, out=cum[1:])
+            kept_counts = cum[self.indptr[1:]] - cum[self.indptr[:-1]]
+            kept_indices = self.indices[keep]
+        else:
+            kept_counts = np.diff(self.indptr)
+            kept_indices = self.indices
+        add_counts = np.zeros(n, np.int64)
+        for u, lst in ov.added.items():
+            add_counts[u] = len(lst)
+        indptr = np.zeros(n + 1, np.int64)
+        np.cumsum(kept_counts + add_counts, out=indptr[1:])
+        indices = np.empty(int(indptr[-1]), np.int32)
+        if len(kept_indices):
+            # kept base edges land at the head of their merged row: global
+            # row-major order is preserved, so destinations are one
+            # vectorized scatter
+            starts = np.cumsum(kept_counts) - kept_counts
+            dest = (np.repeat(indptr[:-1] - starts, kept_counts)
+                    + np.arange(len(kept_indices)))
+            indices[dest] = kept_indices
+        for u, lst in ov.added.items():
+            at = indptr[u] + kept_counts[u]
+            indices[at:at + len(lst)] = lst
+        return indptr, indices
+
+    def _check_endpoints(self, src: np.ndarray, dst: np.ndarray):
+        if len(src) != len(dst):
+            raise ValueError(f"src/dst length mismatch: {len(src)} vs "
+                             f"{len(dst)}")
+        for arr in (src, dst):
+            if len(arr) and (arr.min() < 0 or arr.max() >= self.num_nodes):
+                raise ValueError(f"edge endpoint outside [0, "
+                                 f"{self.num_nodes})")
+
+    def _base_live_positions(self, u: int, v: int) -> np.ndarray:
+        """Base ``indices`` positions of live (kept) copies of u→v."""
+        s, e = int(self.indptr[u]), int(self.indptr[u + 1])
+        pos = s + np.where(self.indices[s:e] == v)[0]
+        ov = self._overlay
+        if ov is not None and ov.kept is not None and len(pos):
+            pos = pos[ov.kept[pos]]
+        return pos
+
+    def add_edges(self, src, dst) -> int:
+        """Insert directed edges ``src[i] → dst[i]`` into the overlay.
+        Pairs already live (kept base copy or earlier insertion) are
+        no-ops — duplicate-edge insert never creates a parallel edge.
+        Returns the number actually added; bumps ``topology_version``
+        once iff that number is > 0."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        self._check_endpoints(src, dst)
+        if self._overlay is None:
+            self._overlay = DeltaOverlay(len(self.indices))
+        ov = self._overlay
+        added = 0
+        for u, v in zip(src.tolist(), dst.tolist()):
+            if (u, v) in ov.added_set or len(self._base_live_positions(u, v)):
+                continue
+            ov.added.setdefault(u, []).append(v)
+            ov.added_set.add((u, v))
+            added += 1
+        if added:
+            self.topology_version += 1
+        return added
+
+    def remove_edges(self, src, dst) -> int:
+        """Delete directed edges ``src[i] → dst[i]`` — every live copy
+        (base AND overlay).  Absent pairs are no-ops, so a double-delete
+        is idempotent.  Returns the number of pairs that had a live copy;
+        bumps ``topology_version`` once iff that number is > 0."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        self._check_endpoints(src, dst)
+        if self._overlay is None:
+            self._overlay = DeltaOverlay(len(self.indices))
+        ov = self._overlay
+        removed = 0
+        for u, v in zip(src.tolist(), dst.tolist()):
+            hit = False
+            if (u, v) in ov.added_set:
+                ov.added_set.remove((u, v))
+                ov.added[u].remove(v)
+                if not ov.added[u]:
+                    del ov.added[u]
+                hit = True
+            pos = self._base_live_positions(u, v)
+            if len(pos):
+                ov.ensure_kept()[pos] = False
+                ov.n_removed_base += len(pos)
+                hit = True
+            removed += int(hit)
+        if removed:
+            self.topology_version += 1
+        return removed
+
+    def compact(self) -> int:
+        """Fold the overlay into the base CSR.  The merged view BECOMES
+        the base (same per-row neighbor order, so sampling at the same
+        seed is bit-exact across the fold — the tested invariant), the
+        overlay resets, and ``topology_version`` is UNCHANGED: compaction
+        re-lays-out the same topology.  Returns the number of folded
+        mutations (0 when nothing was pending)."""
+        ov = self._overlay
+        if ov is None or ov.empty:
+            self._overlay = None
+            return 0
+        folded = ov.n_added + ov.n_removed_base
+        indptr, indices = self.adj()
+        self.indptr = np.ascontiguousarray(indptr, dtype=np.int64)
+        self.indices = np.ascontiguousarray(indices, dtype=np.int32)
+        self._overlay = None
+        self._adj_cache = None
+        self._adj_cache_version = -1
+        return folded
 
     def hotness_order(self) -> np.ndarray:
         """Node ids sorted by descending out-degree (PaGraph hotness)."""
@@ -170,7 +385,12 @@ class FeatureStore:
         self.version += 1
         self.rows_updated += len(ids)
         for fn in list(self._subscribers):
-            fn(ids, rows)
+            # a subscriber may detach another (or itself) mid-fanout — e.g.
+            # a plane being torn down by the trainer callback running just
+            # before it; delivering to the detached one would write into a
+            # dead object (tests/test_streaming.py covers this)
+            if fn in self._subscribers:
+                fn(ids, rows)
         return self.version
 
 

@@ -92,6 +92,8 @@ def run_gnn(args):
         cfg = cfg.replace(halo_budget=args.halo_budget)
     if args.halo_refresh_interval is not None:
         cfg = cfg.replace(halo_refresh_interval=args.halo_refresh_interval)
+    if args.rebalance_drift is not None:
+        cfg = cfg.replace(rebalance_drift=args.rebalance_drift)
     if args.sampling_device is not None:
         cfg = cfg.replace(sampling_device=args.sampling_device)
     cfg = apply_baseline(cfg, args.baseline)
@@ -206,6 +208,11 @@ def main():
                     help="re-run the bounded halo exchange every N global "
                          "steps when streamed feature updates left halo "
                          "copies stale (0 = explicit refresh only)")
+    ap.add_argument("--rebalance-drift", type=float, default=None,
+                    help="cut-fraction drift past the plan baseline that "
+                         "triggers an incremental partition re-balance "
+                         "between global steps on a mutating graph "
+                         "(boundary-node migration; <= 0 disables)")
     ap.add_argument("--sampling-device", default=None,
                     choices=[None, "cpu", "device", "auto"],
                     help="feature-plane backend for batch generation: "

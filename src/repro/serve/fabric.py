@@ -71,6 +71,12 @@ class ServingFabric(EngineBase):
         self.replicas = replicas
         self.engine_batch = batch
         self._weight_source = weight_source
+        self._seed = seed
+        # topology the fabric currently serves: each replica samples a
+        # FROZEN subgraph copy built at plan time, so mutations to the
+        # full graph are invisible until refresh_topology() adopts a new
+        # plan — the version stamp makes that consistency auditable
+        self.topology_version = plan.topology_version
         self._init_serving(batch * plan.parts * replicas, keep_completed,
                            window=max(256, 4 * batch * plan.parts))
         self.slo = SLOAdmission(
@@ -197,6 +203,7 @@ class ServingFabric(EngineBase):
         before it consumes queue space."""
         self._validate(req)
         req.partition = int(self.plan.owner_of([req.node])[0])
+        req.topology_version = self.topology_version
         req.t_submit = time.perf_counter()
         if self.slo.on_offer(self._queued()) == "shed":
             self._shed(req)
@@ -282,6 +289,69 @@ class ServingFabric(EngineBase):
             weights = self._weight_source.get_weights()
         for eng in self.all_engines:
             eng.set_weights(weights)
+
+    # ------------------------------------------------------------------
+    # topology hand-off: a mutated graph reaches serving the same way
+    # weights do — a whole-plan swap BETWEEN steps, never mid-flight
+    # ------------------------------------------------------------------
+    def refresh_topology(self, plan: Optional[PartitionPlan] = None,
+                         planes: Optional[List] = None,
+                         weight_fns: Optional[List] = None):
+        """Adopt a new ``PartitionPlan`` (post edge stream / compaction /
+        incremental re-balance).  The ``FeatureCache.version`` discipline
+        generalized to topology: requests already dispatched finish
+        against the subgraphs they were admitted under (each replica's
+        graph is a frozen copy and a single-shot query retires inside one
+        engine step), THEN the fleet is rebuilt over the new plan's
+        subgraphs and every request admitted afterwards carries the new
+        ``topology_version`` stamp.  Requests still in the fabric queue
+        are re-routed (owner may have changed under a re-balance).  With
+        no arguments, pulls plan/planes/weight_fns from the trainer this
+        fabric was built from (``from_trainer``)."""
+        if plan is None:
+            if self._weight_source is None:
+                raise ValueError("no topology source: pass plan= or build "
+                                 "the fabric with from_trainer")
+            src = self._weight_source
+            plan = src.plan
+            planes = [s.pipe.plane for s in src.slots]
+            weight_fns = [s.weight_fn for s in src.slots]
+        if plan.parts != self.plan.parts:
+            raise ValueError(f"refresh_topology cannot change the partition "
+                             f"count ({self.plan.parts} -> {plan.parts}); "
+                             f"build a new fabric")
+        # drain dispatched work: every replica finishes what it holds
+        # against the OLD topology (bounded — single-shot queries retire
+        # within one step each)
+        for eng in self.all_engines:
+            iters = 0
+            while eng.has_work() and iters < 10_000:
+                eng.step()
+                iters += 1
+        params = (self._weight_source.get_weights()["params"]
+                  if self._weight_source is not None
+                  else self.all_engines[0].params)
+        node_maps = plan.node_maps()
+        planes = planes if planes is not None else [None] * plan.parts
+        weight_fns = (weight_fns if weight_fns is not None
+                      else [None] * plan.parts)
+        self.engines = [
+            [GNNInferenceEngine(plan.subgraphs[p], self.cfg, params,
+                                plane=planes[p], batch=self.engine_batch,
+                                weight_fn=weight_fns[p],
+                                seed=self._seed + 101 * p + r,
+                                node_map=node_maps[p],
+                                retire_hook=self._on_replica_retire,
+                                keep_completed=max(self.engine_batch, 16))
+             for r in range(self.replicas)]
+            for p in range(plan.parts)]
+        self.plan = plan
+        self.topology_version = plan.topology_version
+        # queued-but-undispatched requests route against the NEW owners
+        # (and serve the new topology, so they get the new stamp)
+        for req in self.pending:
+            req.partition = int(plan.owner_of([req.node])[0])
+            req.topology_version = self.topology_version
 
     # ------------------------------------------------------------------
     # metrics

@@ -69,6 +69,10 @@ class GNNRequest:
     logits: Optional[np.ndarray] = None  # (num_classes,) float32
     status: str = "pending"            # pending | done | shed
     partition: int = -1                # owning partition (fabric-routed)
+    # graph topology version at admission (fabric-stamped; −1 = unrouted):
+    # a query answers against the topology it was admitted under — edges
+    # streamed after the stamp only affect later requests
+    topology_version: int = -1
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0

@@ -1,0 +1,385 @@
+"""Dynamic-graph substrate differential harness (graph/storage.py delta-CSR
+overlay → compaction → ``topology_version``; graph/partition.py incremental
+re-balancing; serve/fabric.py topology-consistent serving).
+
+Three differential anchors, each comparing the production path against an
+independent model of the same semantics:
+
+  (a) sampling over base+overlay is BIT-EXACT with sampling over the
+      compacted CSR at the same seed and ``topology_version`` (the merged
+      view and the folded base are the same arrays — verified against a
+      dict-of-lists reference model so the check isn't circular);
+  (b) budget-0 subgraphs after an incremental re-balance equal those from
+      a fresh finalize over the mutated graph (nothing in the plan is
+      stale), with the acceptance envelope: < 25% of nodes moved, cut
+      fraction within 10% of a from-scratch partition;
+  (c) mid-serving edge inserts never change predictions for queries
+      admitted before the version bump (replicas sample frozen subgraph
+      copies; the mutation reaches serving only through
+      ``ServingFabric.refresh_topology``).
+
+Property sweeps run through tests/_hypothesis_compat.py: real hypothesis
+search when the extra is installed, a deterministic seeded fixed-case
+sweep otherwise (the CI fast lane covers the shim path).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.gnn import gnn_config
+from repro.core.feature_plane import DeviceFeaturePlane, HostFeaturePlane
+from repro.core.sampling import NeighborSampler
+from repro.graph.batch import batch_device_arrays, generate_batch
+from repro.graph.partition import (assignment_cut_fraction, _finalize_plan,
+                                   incremental_rebalance, plan_partitions)
+from repro.graph.storage import Graph
+from repro.graph.synthetic import dataset_like
+from repro.serve.fabric import ServingFabric
+from repro.serve.gnn_engine import GNNRequest
+
+
+def _fresh_graph(seed=0):
+    """Dynamic-graph tests mutate topology — never the session fixture."""
+    return dataset_like(gnn_config("products", smoke=True), seed=seed)
+
+
+def _tiny_graph(n=40, deg=4, seed=0):
+    """Small graph for reference-model sweeps (O(N·E) model is fine)."""
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, n * deg)
+    order = np.argsort(src, kind="stable")
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=indptr[1:])
+    return Graph(indptr=indptr, indices=dst[order].astype(np.int32),
+                 features=rng.standard_normal((n, 4)).astype(np.float32),
+                 labels=rng.integers(0, 3, n).astype(np.int32),
+                 train_mask=np.ones(n, bool), val_mask=np.zeros(n, bool),
+                 test_mask=np.zeros(n, bool), name=f"tiny{n}")
+
+
+class RefAdjacency:
+    """Independent dict-of-lists model of the delta-CSR semantics: per-row
+    neighbor order is kept-base-order then insertion-order, insert is a
+    set no-op on live pairs, remove deletes every live copy."""
+
+    def __init__(self, g: Graph):
+        self.rows = [[int(x) for x in g.indices[g.indptr[v]:g.indptr[v + 1]]]
+                     for v in range(g.num_nodes)]
+
+    def add(self, u, v):
+        if v in self.rows[u]:
+            return 0
+        self.rows[u].append(v)
+        return 1
+
+    def remove(self, u, v):
+        had = v in self.rows[u]
+        self.rows[u] = [x for x in self.rows[u] if x != v]
+        return int(had)
+
+    def assert_equal(self, g: Graph):
+        indptr, indices = g.adj()
+        for v, row in enumerate(self.rows):
+            got = indices[indptr[v]:indptr[v + 1]].tolist()
+            assert got == row, f"row {v}: {got} != {row}"
+        assert g.num_edges == sum(len(r) for r in self.rows)
+
+
+# ---------------------------------------------------------------------------
+# (sweep) insert/delete/compact interleavings vs. the reference model
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       ops=st.lists(st.sampled_from(["add", "remove", "compact"]),
+                    min_size=1, max_size=24))
+def test_mutation_interleavings_match_reference_model(seed, ops):
+    g = _tiny_graph(seed=7)
+    ref = RefAdjacency(g)
+    rng = np.random.default_rng(seed)
+    version = g.topology_version
+    for op in ops:
+        if op == "compact":
+            g.compact()
+            assert g.topology_version == version    # layout, not topology
+            continue
+        u = rng.integers(0, g.num_nodes, 3)
+        v = rng.integers(0, g.num_nodes, 3)
+        if op == "add":
+            want = sum(ref.add(int(a), int(b)) for a, b in zip(u, v))
+            got = g.add_edges(u, v)
+        else:
+            want = sum(ref.remove(int(a), int(b)) for a, b in zip(u, v))
+            got = g.remove_edges(u, v)
+        assert got == want
+        assert g.topology_version == version + (1 if want else 0)
+        version = g.topology_version
+        ref.assert_equal(g)
+    g.compact()
+    ref.assert_equal(g)                             # fold preserves order
+    assert not g.has_overlay
+
+
+def test_duplicate_insert_is_noop_and_double_delete_idempotent():
+    g = _tiny_graph(seed=1)
+    u, v = 0, int(g.neighbors(0)[0])                # a live base edge
+    assert g.add_edges([u], [v]) == 0               # already present
+    assert g.topology_version == 0
+    assert g.add_edges([u], [g.num_nodes - 1]) <= 1
+    tv = g.topology_version
+    assert g.add_edges([u], [g.num_nodes - 1]) == 0  # duplicate overlay add
+    assert g.topology_version == tv
+    assert g.remove_edges([u], [v]) == 1
+    assert g.remove_edges([u], [v]) == 0            # idempotent
+    assert v not in g.neighbors(u)
+    tv = g.topology_version
+    assert g.remove_edges([u], [v]) == 0
+    assert g.topology_version == tv
+
+
+def test_remove_deletes_every_parallel_base_copy():
+    # synthetic base CSRs can hold parallel edges; set-remove kills all
+    g = _tiny_graph(seed=2)
+    row0 = g.neighbors(0).copy()
+    dup = int(row0[0])
+    copies = int(np.sum(row0 == dup))
+    before = g.num_edges
+    assert g.remove_edges([0], [dup]) == 1          # one PAIR removed...
+    assert dup not in g.neighbors(0)
+    assert g.num_edges == before - copies           # ...but every copy died
+
+
+def test_endpoint_validation():
+    g = _tiny_graph()
+    with pytest.raises(ValueError):
+        g.add_edges([0], [g.num_nodes])
+    with pytest.raises(ValueError):
+        g.remove_edges([-1], [0])
+    with pytest.raises(ValueError):
+        g.add_edges([0, 1], [0])
+
+
+def test_frozen_graph_adj_is_the_base_arrays():
+    """No-overlay adj() must return the base arrays UNTOUCHED (identity,
+    not a copy) — the zero-cost regression anchor for every existing
+    frozen-graph consumer."""
+    g = _fresh_graph()
+    indptr, indices = g.adj()
+    assert indptr is g.indptr and indices is g.indices
+    g.add_edges([0], [1]) or g.remove_edges([0], [1])
+    g.compact()
+    indptr, indices = g.adj()
+    assert indptr is g.indptr and indices is g.indices
+
+
+# ---------------------------------------------------------------------------
+# (a) overlay sampling ≡ compacted sampling, bit-exact, both backends
+# ---------------------------------------------------------------------------
+
+def _mutate(g: Graph, seed=11, n_add=400, n_del=150):
+    rng = np.random.default_rng(seed)
+    g.add_edges(rng.integers(0, g.num_nodes, n_add),
+                rng.integers(0, g.num_nodes, n_add))
+    del_src = rng.integers(0, g.num_nodes, n_del)
+    del_dst = [int(g.neighbors(int(v))[0]) if len(g.neighbors(int(v)))
+               else 0 for v in del_src]
+    g.remove_edges(del_src, del_dst)
+    return g
+
+
+def test_overlay_vs_compacted_sampling_bitexact():
+    g_over = _mutate(_fresh_graph(seed=5))
+    g_comp = _mutate(_fresh_graph(seed=5))
+    assert g_comp.compact() > 0
+    assert g_over.topology_version == g_comp.topology_version
+    assert g_over.num_edges == g_comp.num_edges
+    seeds = np.unique(np.random.default_rng(3).integers(
+        0, g_over.num_nodes, 64))[:32].astype(np.int64)
+    for use_ref in (False, True):                   # ES fast path + oracle
+        mb_o = NeighborSampler(g_over, (5, 5), seed=42,
+                               use_reference=use_ref).sample(seeds)
+        mb_c = NeighborSampler(g_comp, (5, 5), seed=42,
+                               use_reference=use_ref).sample(seeds)
+        assert mb_o.topology_version == mb_c.topology_version
+        for bo, bc in zip(mb_o.blocks, mb_c.blocks):
+            np.testing.assert_array_equal(bo.src_ids, bc.src_ids)
+            np.testing.assert_array_equal(bo.dst_ids, bc.dst_ids)
+            np.testing.assert_array_equal(bo.neigh_idx, bc.neigh_idx)
+
+
+@pytest.mark.parametrize("plane_cls", [HostFeaturePlane, DeviceFeaturePlane])
+def test_batch_generation_bitexact_across_compaction(plane_cls):
+    """The full batch path (sample → plane gather → device arrays) is
+    bit-exact across a compaction on BOTH feature-plane backends, and the
+    arrays carry the sampled-at topology version."""
+    from repro.core.cache import FeatureCache
+    g_over = _mutate(_fresh_graph(seed=9))
+    g_comp = _mutate(_fresh_graph(seed=9))
+    g_comp.compact()
+    seeds = np.arange(16, dtype=np.int64) * 7
+    out = []
+    for g in (g_over, g_comp):
+        plane = plane_cls(g, FeatureCache(g, 0.05, "static"))
+        mb = NeighborSampler(g, (3, 3), seed=8).sample(seeds)
+        mb = generate_batch(mb, plane, g)
+        out.append(batch_device_arrays(mb))
+    np.testing.assert_array_equal(out[0]["features"], out[1]["features"])
+    for a, b in zip(out[0]["neigh_idxs"], out[1]["neigh_idxs"]):
+        np.testing.assert_array_equal(a, b)
+    assert (out[0]["topology_version"] == out[1]["topology_version"]
+            == g_comp.topology_version)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_ops=st.integers(2, 6))
+def test_long_interleaving_sampling_parity_sweep(seed, n_ops):
+    """Longer randomized interleavings: after EVERY mutation batch, the
+    overlay graph and an eagerly-compacted twin sample identically."""
+    g_lazy = _tiny_graph(n=120, deg=5, seed=4)
+    g_eager = _tiny_graph(n=120, deg=5, seed=4)
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        u = rng.integers(0, 120, 12)
+        v = rng.integers(0, 120, 12)
+        if rng.integers(2):
+            g_lazy.add_edges(u, v)
+            g_eager.add_edges(u, v)
+        else:
+            g_lazy.remove_edges(u, v)
+            g_eager.remove_edges(u, v)
+        g_eager.compact()
+        assert g_lazy.topology_version == g_eager.topology_version
+        seeds = np.unique(rng.integers(0, 120, 16)).astype(np.int64)
+        mb_l = NeighborSampler(g_lazy, (4,), seed=seed + i).sample(seeds)
+        mb_e = NeighborSampler(g_eager, (4,), seed=seed + i).sample(seeds)
+        np.testing.assert_array_equal(mb_l.blocks[0].neigh_idx,
+                                      mb_e.blocks[0].neigh_idx)
+
+
+# ---------------------------------------------------------------------------
+# (b) incremental re-balance: nothing stale, acceptance envelope holds
+# ---------------------------------------------------------------------------
+
+def test_rebalanced_plan_equals_fresh_finalize_of_mutated_graph():
+    """Budget-0 subgraphs (and every stat) of the re-balanced plan equal a
+    from-scratch finalize of the SAME assignment over the mutated graph —
+    i.e. the re-balance recomputed everything against the new topology."""
+    g = _mutate(_fresh_graph(seed=13), n_add=2000, n_del=0)
+    plan = plan_partitions(_fresh_graph(seed=13), 3, "locality", seed=0)
+    res = incremental_rebalance(g, plan)
+    g.compact()                                     # fold; version unchanged
+    fresh = _finalize_plan(g, res.plan.node_sets, res.plan.owner,
+                           res.plan.method, 0)
+    assert res.plan.topology_version == g.topology_version
+    assert res.plan.cut_edges == fresh.cut_edges
+    assert res.plan.kept_information(g) == fresh.kept_information(g)
+    for a, b in zip(res.plan.subgraphs, fresh.subgraphs):
+        np.testing.assert_array_equal(a.indptr, b.indptr)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.features, b.features)
+
+
+def test_incremental_rebalance_meets_acceptance_envelope():
+    g = _fresh_graph(seed=3)
+    plan = plan_partitions(g, 4, "locality", seed=0)
+    rng = np.random.default_rng(1)
+    g.add_edges(rng.integers(0, g.num_nodes, 4000),
+                rng.integers(0, g.num_nodes, 4000))
+    res = incremental_rebalance(g, plan)
+    fresh_cut = assignment_cut_fraction(
+        g, plan_partitions(g, 4, "locality", seed=0).owner)
+    assert res.moved_frac < 0.25                    # boundary nodes only
+    assert res.cut_after <= res.cut_before
+    assert res.cut_after <= fresh_cut * 1.10        # within 10% of fresh
+    # ownership stays a total disjoint cover with bounded imbalance
+    allv = np.concatenate(res.plan.node_sets)
+    assert len(allv) == g.num_nodes
+    assert len(np.unique(allv)) == g.num_nodes
+    sizes = np.array([len(s) for s in res.plan.node_sets])
+    assert sizes.min() >= int(np.floor(g.num_nodes / 4 * 0.9))
+
+
+def test_rebalance_respects_move_budget():
+    g = _mutate(_fresh_graph(seed=21), n_add=5000, n_del=0)
+    plan = plan_partitions(_fresh_graph(seed=21), 4, "locality", seed=0)
+    res = incremental_rebalance(g, plan, max_move_frac=0.01)
+    assert res.moved_nodes <= int(0.01 * g.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# (c) serving: admitted queries are immune to mid-serving edge inserts
+# ---------------------------------------------------------------------------
+
+def _serving_pair(seed=17, parts=2):
+    """Two identically-built (graph, plan, fabric) rigs — mutate one
+    mid-serving, leave its twin frozen, and compare."""
+    from repro.models.gnn import decls_gnn
+    from repro.models.params import init_params
+    import jax
+    rigs = []
+    cfg = gnn_config("products", smoke=True)
+    params = None
+    for _ in range(2):
+        g = dataset_like(cfg, seed=seed)
+        plan = plan_partitions(g, parts, "locality", seed=0, halo_budget=0)
+        if params is None:
+            params = init_params(decls_gnn(cfg), jax.random.PRNGKey(0))
+        fab = ServingFabric.from_plan(g, plan, cfg, params, batch=2, seed=0)
+        rigs.append((g, plan, fab))
+    return rigs
+
+
+def test_midserving_inserts_do_not_change_admitted_predictions():
+    (g_mut, _, fab_mut), (_, _, fab_frozen) = _serving_pair()
+    nodes = [3, 41, 77, 200, 515, 999]
+    v0 = fab_mut.topology_version
+    for i, n in enumerate(nodes):
+        fab_mut.submit(GNNRequest(rid=i, node=n))
+        fab_frozen.submit(GNNRequest(rid=i, node=n))
+    # mutate AFTER admission, BEFORE any serving step ran
+    rng = np.random.default_rng(2)
+    assert g_mut.add_edges(rng.integers(0, g_mut.num_nodes, 500),
+                           rng.integers(0, g_mut.num_nodes, 500)) > 0
+    assert g_mut.topology_version > v0
+    fab_mut.run_to_completion()
+    fab_frozen.run_to_completion()
+    assert fab_mut.topology_version == v0           # not yet refreshed
+    by_rid = lambda fab: {r.rid: r for r in fab.completed}
+    a, b = by_rid(fab_mut), by_rid(fab_frozen)
+    assert set(a) == set(b) == set(range(len(nodes)))
+    for rid in a:
+        assert a[rid].topology_version == v0        # pre-bump stamp
+        assert a[rid].pred == b[rid].pred
+        np.testing.assert_array_equal(a[rid].logits, b[rid].logits)
+
+
+def test_refresh_topology_adopts_new_plan_and_restamps():
+    (g, _, fab), _ = _serving_pair()
+    rng = np.random.default_rng(5)
+    g.add_edges(rng.integers(0, g.num_nodes, 300),
+                rng.integers(0, g.num_nodes, 300))
+    new_plan = plan_partitions(g, 2, "locality", seed=0, halo_budget=0)
+    assert new_plan.topology_version == g.topology_version
+    fab.submit(GNNRequest(rid=0, node=7))           # queued pre-refresh
+    old_v = fab.topology_version
+    fab.refresh_topology(plan=new_plan)
+    assert fab.topology_version == g.topology_version > old_v
+    # queued-but-undispatched requests were re-routed and re-stamped
+    assert fab.pending[0].topology_version == fab.topology_version
+    assert fab.pending[0].partition == int(new_plan.owner_of([7])[0])
+    fab.run_to_completion()
+    assert fab.completed[-1].status == "done"
+    # and a post-refresh submit serves the new topology's stamp
+    fab.submit(GNNRequest(rid=1, node=11))
+    assert fab.pending[0].topology_version == fab.topology_version
+    fab.run_to_completion()
+
+
+def test_refresh_topology_rejects_partition_count_change():
+    (g, _, fab), _ = _serving_pair()
+    plan3 = plan_partitions(g, 3, "locality", seed=0)
+    with pytest.raises(ValueError, match="partition count"):
+        fab.refresh_topology(plan=plan3)

@@ -354,3 +354,72 @@ def test_fit_autotuned_with_halo_knob(smoke_graph, smoke_gnn_cfg):
     assert all("halo_budget" in ep.config for ep in rep.episodes)
     for ep in rep.episodes:
         assert np.isfinite(list(ep.metrics.values())).all()
+
+
+# ---------------------------------------------------------------------------
+# halo sets after node migration (dynamic topology)
+# ---------------------------------------------------------------------------
+
+def test_halo_sets_recomputed_after_migration():
+    """An incremental re-balance must rebuild the halo machinery against
+    the NEW ownership and the NEW adjacency: halo affinity ranks reflect
+    post-move cut edges, `kept_information` is recomputed (not carried
+    from the stale plan), and the budget invariants all still hold."""
+    from repro.configs.gnn import gnn_config
+    from repro.graph.partition import (_finalize_plan, incremental_rebalance)
+    from repro.graph.synthetic import dataset_like
+    g = dataset_like(gnn_config("products", smoke=True), seed=14)
+    plan = plan_partitions(g, 3, "locality", seed=0, halo_budget=24)
+    rng = np.random.default_rng(3)
+    g.add_edges(rng.integers(0, g.num_nodes, 2500),
+                rng.integers(0, g.num_nodes, 2500))
+    res = incremental_rebalance(g, plan)
+    new = res.plan
+    # against a fresh finalize of the same assignment over the mutated
+    # graph: identical halo sets, stats and kept information — stale
+    # anything would diverge here
+    fresh = _finalize_plan(g, new.node_sets, new.owner, new.method, 24)
+    assert new.cut_edges == fresh.cut_edges
+    assert new.recovered_edges == fresh.recovered_edges
+    assert new.kept_information(g) == fresh.kept_information(g)
+    for a, b in zip(new.halo_sets, fresh.halo_sets):
+        np.testing.assert_array_equal(a, b)
+    # ...and it differs from the pre-move plan's stale view
+    assert new.kept_information(g) != plan.kept_information(g)
+    # budget invariants survive the migration
+    for p, hs in enumerate(new.halo_sets):
+        assert len(hs) <= 24
+        assert (new.owner[hs] != p).all()
+        # every budgeted halo node is reachable from an owned out-edge
+        indptr, indices = g.adj()
+        owned = new.node_sets[p]
+        src = np.repeat(np.arange(g.num_nodes), np.diff(indptr))
+        mine = np.isin(src, owned)
+        assert np.isin(hs, indices[mine]).all()
+
+
+def test_trainer_rebalance_refills_halo_rows():
+    """Post-rebalance slots carry freshly-exchanged halo feature rows for
+    the NEW halo sets (never zeros, never the old plan's rows)."""
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    cfg = gnn_config("products", smoke=True).replace(partitions=2,
+                                                     halo_budget=16)
+    g = dataset_like(cfg, seed=15)
+    tr = MultiPartitionTrainer(g, cfg, seed=0)
+    try:
+        rng = np.random.default_rng(6)
+        g.add_edges(rng.integers(0, g.num_nodes, 3000),
+                    rng.integers(0, g.num_nodes, 3000))
+        tr.rebalance_partitions()
+        assert tr.plan.halo_budget == 16
+        for slot, ns, hs in zip(tr.slots, tr.plan.node_sets,
+                                tr.plan.halo_sets):
+            if not len(hs):
+                continue
+            local = np.arange(len(ns), len(ns) + len(hs))
+            np.testing.assert_array_equal(
+                slot.pipe.plane.fetch(local), g.features[hs])
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()

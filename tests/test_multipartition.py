@@ -321,3 +321,92 @@ def test_fit_autotuned_with_partitions_knob(smoke_graph, smoke_gnn_cfg):
         # an episode at p partitions measured p mini-batches per global step
         assert ep.steps == acfg.steps_per_episode * int(
             ep.config["partitions"])
+
+
+# ---------------------------------------------------------------------------
+# dynamic topology: drift tracking + incremental re-balance (trainer path)
+# ---------------------------------------------------------------------------
+
+def _mutable_graph(seed=0):
+    """Rebalance tests mutate topology — never the session fixture."""
+    from repro.configs.gnn import gnn_config
+    from repro.graph.synthetic import dataset_like
+    return dataset_like(gnn_config("products", smoke=True), seed=seed)
+
+
+def test_owner_of_total_and_disjoint_after_rebalance(smoke_gnn_cfg):
+    """Post-migration, `owner_of` still answers every node with exactly
+    one partition, consistent with the node sets, and halo sets never
+    contain owned nodes."""
+    from repro.graph.partition import incremental_rebalance
+    g = _mutable_graph(seed=6)
+    plan = plan_partitions(g, 3, "locality", seed=0, halo_budget=16)
+    rng = np.random.default_rng(0)
+    g.add_edges(rng.integers(0, g.num_nodes, 3000),
+                rng.integers(0, g.num_nodes, 3000))
+    new = incremental_rebalance(g, plan).plan
+    assert new.halo_budget == plan.halo_budget      # budget carries over
+    owners = new.owner_of(np.arange(g.num_nodes))
+    assert (owners >= 0).all() and (owners < 3).all()
+    for p, ns in enumerate(new.node_sets):
+        assert (owners[ns] == p).all()
+        assert not np.isin(new.halo_sets[p], ns).any()   # halo ∩ owned = ∅
+        assert (owners[new.halo_sets[p]] != p).all()
+    # the shared local-id map matches per-set positions (routing contract)
+    local = new.local_ids()
+    for ns in new.node_sets:
+        np.testing.assert_array_equal(local[ns],
+                                      np.arange(len(ns), dtype=np.int32))
+
+
+def test_trainer_rebalance_updates_plan_and_accounting(smoke_gnn_cfg):
+    cfg = smoke_gnn_cfg.replace(partitions=2)
+    g = _mutable_graph(seed=8)
+    tr = MultiPartitionTrainer(g, cfg, seed=0)
+    try:
+        assert tr.cut_drift() == 0.0                # version-matched: free
+        rng = np.random.default_rng(4)
+        g.add_edges(rng.integers(0, g.num_nodes, 3000),
+                    rng.integers(0, g.num_nodes, 3000))
+        drift = tr.cut_drift()
+        assert drift > 0.0
+        res = tr.rebalance_partitions()
+        assert tr.rebalances == 1 and tr.last_rebalance is res
+        assert res.moved_frac < cfg.rebalance_max_move + 1e-9
+        assert tr.plan.topology_version == g.topology_version
+        assert tr.cut_drift() == 0.0                # re-baselined
+        # the new plan is live: slots rebuilt over the new subgraphs, and
+        # training continues through them
+        assert [s.graph.num_nodes for s in tr.slots] == \
+            [len(ns) for ns in tr.plan.node_sets]
+        params_before = jax.tree.leaves(tr.params)
+        tr.global_step()
+        assert any(not np.array_equal(a, np.asarray(b)) for a, b in
+                   zip(params_before, jax.tree.leaves(tr.params)))
+        extra = tr.checkpoint_extra()
+        assert extra["topology_version"] == g.topology_version
+        assert extra["rebalances"] == 1
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()
+
+
+def test_drift_trigger_rebalances_between_global_steps(smoke_gnn_cfg):
+    """`rebalance_drift` arms the trigger: a big enough cut-fraction
+    degradation rebalances at the NEXT global step, exactly once."""
+    cfg = smoke_gnn_cfg.replace(partitions=2, rebalance_drift=0.01)
+    g = _mutable_graph(seed=12)
+    tr = MultiPartitionTrainer(g, cfg, seed=0)
+    try:
+        tr.global_step()
+        assert tr.rebalances == 0                   # no drift yet
+        rng = np.random.default_rng(9)
+        g.add_edges(rng.integers(0, g.num_nodes, 4000),
+                    rng.integers(0, g.num_nodes, 4000))
+        tr.global_step()
+        assert tr.rebalances == 1
+        tr.global_step()                            # re-baselined: no loop
+        assert tr.rebalances == 1
+    finally:
+        for s in tr.slots:
+            s.pipe.shutdown()

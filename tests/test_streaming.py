@@ -269,3 +269,68 @@ def test_multipart_update_of_unowned_halo_free_node_is_local():
     finally:
         for s in tr.slots:
             s.pipe.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# subscriber lifecycle edges (dynamic-graph PR regressions)
+# ---------------------------------------------------------------------------
+
+def test_detach_during_fanout_skips_the_detached_subscriber():
+    """A subscriber that detaches ANOTHER subscriber mid-fanout (a teardown
+    callback replacing a plane) must prevent delivery to the dead one —
+    update_rows re-checks membership per subscriber."""
+    graph = _fresh_graph()
+    store = FeatureStore(graph)
+    calls = []
+
+    def late(ids, rows):
+        calls.append("late")
+
+    def early(ids, rows):
+        calls.append("early")
+        store.unsubscribe(late)          # tears its sibling down mid-fanout
+
+    store.subscribe(early)
+    store.subscribe(late)
+    store.update_rows(np.array([0]),
+                      np.zeros((1, graph.feat_dim), np.float32))
+    assert calls == ["early"]            # late never ran
+    # self-detach mid-fanout is equally safe, and later subscribers run
+    calls.clear()
+
+    def selfish(ids, rows):
+        calls.append("selfish")
+        store.unsubscribe(selfish)
+
+    store.subscribe(selfish)
+    store.update_rows(np.array([0]),
+                      np.zeros((1, graph.feat_dim), np.float32))
+    assert calls == ["early", "selfish"]
+    store.update_rows(np.array([0]),
+                      np.zeros((1, graph.feat_dim), np.float32))
+    assert calls == ["early", "selfish", "early"]   # selfish stayed gone
+
+
+@pytest.mark.parametrize("plane_cls", [HostFeaturePlane, DeviceFeaturePlane])
+def test_update_of_rows_outside_subscribed_plane_universe_is_noop(plane_cls):
+    """A plane over a SUBGRAPH subscribed to a full-graph store: streamed
+    ids outside the subgraph's node universe have no copy there — the
+    fanout must drop them (no IndexError), and in-universe ids in the
+    same batch still land."""
+    full = _fresh_graph()
+    sub = full.subgraph(np.arange(64, dtype=np.int32))
+    plane = plane_cls(sub, FeatureCache(sub, 0.05, "static"))
+    store = FeatureStore(full)
+    plane.subscribe_to(store)
+    resident = int(np.where(plane.cache.device_map >= 0)[0][0])
+    plane.fetch(np.array([resident]))
+    outside = full.num_nodes - 1
+    rows = np.stack([np.full(full.feat_dim, 9.0, np.float32),
+                     np.full(full.feat_dim, -4.0, np.float32)])
+    store.update_rows(np.array([resident, outside]), rows)   # must not raise
+    np.testing.assert_array_equal(plane.fetch(np.array([resident]))[0],
+                                  rows[0])
+    # an all-outside batch is a clean no-op too
+    v = plane.cache.version
+    store.update_rows(np.array([outside]), rows[1:])
+    assert plane.cache.version == v
