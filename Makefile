@@ -8,7 +8,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint docs-check ci autotune-demo bench-quick \
-        scaleout-demo halo-demo serve-gnn-demo
+        bench-gather fused-demo scaleout-demo halo-demo serve-gnn-demo
 
 test:            ## full tier-1 suite (the ROADMAP bar)
 	$(PY) -m pytest -x -q
@@ -41,5 +41,15 @@ serve-gnn-demo:  ## online GNN inference through the trainer's FeaturePlane
 	$(PY) -m repro.launch.serve --gnn --arch graphsage-products --smoke \
 	    --queries 16 --batch 4 --train-steps 4
 
-bench-quick:     ## reduced benchmark sweep
-	$(PY) -m benchmarks.run --quick
+fused-demo:      ## all-hop fused device pipeline on a smoke graph
+	$(PY) -m repro.launch.train --arch graphsage-products --smoke \
+	    --fused-gather-agg --steps 6
+
+# perf targets run under the tuned host runtime (scripts/env_tuned.sh:
+# tcmalloc preload when installed + pinned XLA host flags) so wall-clock
+# numbers are taken the way a tuned training box would take them
+bench-quick:     ## reduced benchmark sweep (tuned runtime)
+	bash scripts/env_tuned.sh $(PY) -m benchmarks.run --quick
+
+bench-gather:    ## feature-plane gather sweep: fused/unfused × host/device
+	bash scripts/env_tuned.sh $(PY) -m benchmarks.run --only gather

@@ -10,7 +10,16 @@ measures the mirror-sync pathology this repo fixed: a feature stream
 dirties a few resident rows between every fetch, and the device plane is
 timed with incremental sync (per-row delta scatter) against the old
 behavior (``incremental_sync=False`` — whole-mirror re-upload on every
-version bump), with the sync counters reported alongside.  On this CPU
+version bump), with the sync counters reported alongside.
+
+The ``fused`` section is the all-hop fused pipeline's batch-size ×
+feat_dim sweep: the per-batch feature read of the UNFUSED path
+(``fetch`` — every input-hop row materializes on the host) against the
+FUSED step-time read (``fused_inputs`` — resident rows stay addressed by
+cache slot, only miss rows move, into a persistent donated sideband), on
+both planes.  This is the device-plane small-batch gap the fused
+pipeline closes: ``fetch`` pays a device gather dispatch + host copy per
+batch regardless of n, ``fused_inputs`` pays O(miss rows).  On this CPU
 container the comparison shows the seam and the crossover shape, not
 TPU silicon.
 """
@@ -27,6 +36,9 @@ from repro.graph.synthetic import dataset_like
 
 BATCH_ROWS = (256, 1024, 4096)
 BATCH_ROWS_QUICK = (128, 512)
+# fused sweep feature widths: products-native plus the reddit width
+FEAT_DIMS = (100, 602)
+FEAT_DIMS_QUICK = (100,)
 STREAM_ROUNDS = 20
 STREAM_DIRTY_ROWS = 8
 
@@ -65,6 +77,66 @@ def _streamed_device(graph, ids, rounds, incremental, seed=1):
     return dt / len(ids) * 1e6, _sync_counters(dev)
 
 
+def _fused_sweep(quick: bool, rng):
+    """batch-size × feat_dim: unfused fetch vs fused_inputs, host vs
+    device.  The fused read resolves the SAME rows (asserted through the
+    encoded-slot oracle before timing) without materializing resident
+    rows on the host.
+
+    Two deliberate differences from the ``rows`` sweep above (which keeps
+    measuring the cache-hostile floor: uniform ids, 12%-of-features
+    cache): ids are drawn DEGREE-biased — a training batch's input level
+    is the sampler's neighbor expansion, where a node's appearance rate
+    tracks its degree, exactly the pattern the static hotness cache is
+    provisioned for — and the cache is sized at the PAPER CONFIG's
+    volume (GNNConfig.cache_volume_mb, under which the products feature
+    table is device-resident at full scale too: 37.4 MB of features
+    vs a 40 MB cache).  That is the regime the fused pipeline actually
+    trains in; the measured hit rate is committed alongside the
+    timings."""
+    from repro.configs.gnn import gnn_config
+    from repro.kernels.fused_gather_agg.ref import resolve_rows_ref
+    out = {}
+    vol = gnn_config("products").cache_volume_mb
+    for F in (FEAT_DIMS_QUICK if quick else FEAT_DIMS):
+        cfg = bench_gnn_cfg("products").replace(feat_dim=F)
+        if quick:
+            cfg = cfg.replace(num_nodes=3_000, num_edges=40_000)
+        graph = dataset_like(cfg, seed=0)
+        deg = graph.degrees().astype(np.float64)
+        p_deg = deg / deg.sum()
+        out[F] = {}
+        for n in (BATCH_ROWS_QUICK if quick else BATCH_ROWS):
+            ids = rng.choice(graph.num_nodes, n, p=p_deg)
+            host = HostFeaturePlane(graph, FeatureCache(graph, vol,
+                                                        "static"))
+            dev = DeviceFeaturePlane(graph, FeatureCache(graph, vol,
+                                                         "static"))
+            # parity: both planes' encoded inputs resolve to the raw rows
+            for plane in (host, dev):
+                enc, aux, table = plane.fused_inputs(ids, n)
+                rows = np.asarray(resolve_rows_ref(enc, table, aux))
+                assert np.array_equal(rows[:n], graph.features[ids]), \
+                    "fused_inputs row resolution broke"
+            t = {"host_fetch": timed(host.fetch, ids, iters=10),
+                 "device_fetch": timed(dev.fetch, ids, iters=10),
+                 "host_fused": timed(host.fused_inputs, ids, n, iters=10),
+                 "device_fused": timed(dev.fused_inputs, ids, n, iters=10)}
+            d0 = dev.gather_dispatches
+            dev.fused_inputs(ids, n)
+            out[F][n] = {f"{k}_us_per_row": v / n * 1e6
+                         for k, v in t.items()}
+            out[F][n]["hit_rate"] = host.cache.stats.hit_rate
+            out[F][n]["fused_dispatches_per_batch"] = \
+                dev.gather_dispatches - d0
+            emit(f"gather/fused_F{F}_n{n}",
+                 out[F][n]["device_fused_us_per_row"],
+                 f"host_fetch={out[F][n]['host_fetch_us_per_row']:.3f} "
+                 f"dev_fetch={out[F][n]['device_fetch_us_per_row']:.3f} "
+                 f"host_fused={out[F][n]['host_fused_us_per_row']:.3f}")
+    return out
+
+
 def run(quick: bool = False):
     cfg = bench_gnn_cfg("products")
     if quick:
@@ -95,6 +167,9 @@ def run(quick: bool = False):
         emit(f"gather/device_n{n}", t_dev / n * 1e6,
              f"hit={hit:.2f} total={t_dev*1e3:.2f}ms "
              f"full_uploads={dev.sync_full_uploads}")
+
+    # --- fused pipeline: batch-size × feat_dim, fetch vs fused_inputs ---
+    results["fused"] = _fused_sweep(quick, rng)
 
     # --- streamed updates: incremental delta scatter vs whole-mirror ---
     rounds = 5 if quick else STREAM_ROUNDS

@@ -12,7 +12,12 @@
 #          resolve, and every doc must be linked from README.md
 #          (offline-safe, stdlib).  Runs in lane 1 (the fast job)
 #          alongside the fast tests.
-#   kernels: the Pallas kernel oracles (fused gather+aggregate included)
+#   kernels: the Pallas kernel oracles (fused gather+aggregate and the
+#          per-hop neighbor_agg families included) + the all-hop fused
+#          pipeline sweeps in tests/test_fused_agg.py (fused-vs-unfused
+#          parity for graphsage/gcn/gat/gin on host+device planes,
+#          single- and multi-partition, one-jit-signature dispatch
+#          counters, and the small-batch µs/row regression guard)
 #          + the FeaturePlane host/device parity tests (incremental
 #          mirror sync) + the streaming-update mirror re-sync tests —
 #          the focused signal for accelerator-path changes

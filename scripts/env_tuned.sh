@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Tuned host runtime for wall-clock perf runs (SNIPPETS §3 idioms).
+#
+# Wraps any command with the host-level tuning a real CPU-GPU training
+# box would ship with:
+#
+#   * tcmalloc preloaded (LD_PRELOAD) when the library is installed —
+#     the gather/scatter hot path is allocation-heavy and glibc malloc's
+#     central free-list lock serializes the pipeline's worker threads.
+#     TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD is raised so feature-table
+#     sized allocations don't spam stderr mid-benchmark.
+#   * XLA host flags pinned: one host platform device, so jit dispatch
+#     cost is not skewed by device-count probing between runs.
+#
+# Every knob degrades gracefully: a container without tcmalloc runs the
+# command untuned (and core/autotune/controller.tuned_runtime_status()
+# reports which knobs were live, so wall-clock MEASURE numbers are
+# comparable only against numbers taken under the same runtime).
+#
+# Usage:  bash scripts/env_tuned.sh <command> [args...]
+#   e.g.  bash scripts/env_tuned.sh python -m benchmarks.run --only gather
+set -eu
+
+if [ "$#" -eq 0 ]; then
+    echo "usage: $0 <command> [args...]" >&2
+    exit 2
+fi
+
+# -- tcmalloc preload (probe common install paths; skip when absent) ------
+for _cand in /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+             /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+             /usr/lib/libtcmalloc_minimal.so.4 \
+             /usr/lib/libtcmalloc.so; do
+    if [ -e "${_cand}" ]; then
+        export LD_PRELOAD="${_cand}${LD_PRELOAD:+:${LD_PRELOAD}}"
+        # feature tables are legitimately large; don't report them
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=17179869184
+        break
+    fi
+done
+
+# -- XLA host platform: exactly one device, stable dispatch cost ----------
+export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ ${XLA_FLAGS}}"
+
+exec "$@"

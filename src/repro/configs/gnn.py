@@ -70,7 +70,7 @@ class AutotuneConfig:
 class GNNConfig:
     name: str
     family: str = "gnn"
-    model: str = "graphsage"            # graphsage | gcn | gat
+    model: str = "graphsage"            # graphsage | gcn | gat | gin
     num_layers: int = 3
     hidden: int = 256
     feat_dim: int = 602                 # reddit-like default
@@ -86,10 +86,14 @@ class GNNConfig:
     cache_volume_mb: float = 40.0       # Θ
     cache_policy: str = "static"        # static (hotness) | fifo
     sampling_device: str = "cpu"        # cpu | device | auto (probe jax.devices)
-    # fused gather+aggregate layer-0 kernel (kernels/fused_gather_agg):
-    # batch generation emits (h_dst, neighbor-mean) pre-aggregates instead
-    # of the input-hop feature tensor; GraphSAGE only (other models fall
-    # back to the unfused path)
+    # all-hop fused gather+aggregate (kernels/fused_gather_agg +
+    # kernels/segment_agg.neighbor_agg): batch generation defers ALL
+    # feature work to the train step, which resolves the input hop from
+    # encoded cache slots + a miss sideband and runs every hop's
+    # aggregation in place over the previous layer's output buffer —
+    # level-capped buffers give ONE jit signature per (model,
+    # level_caps).  Supported by all model families (graphsage/gcn/gat/
+    # gin); bit-exact with the unfused path on cpu and device planes.
     fused_gather_agg: bool = False
     workers: int = 2
     parallel_mode: str = "seq"          # seq | mode1 | mode2

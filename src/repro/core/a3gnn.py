@@ -25,11 +25,12 @@ from repro.core.locality import bias_weight_fn, accuracy_drop_model
 from repro.core.pipeline import Pipeline, PipelineStats
 from repro.core.perf_model import MemoryTerms, memory_seq, memory_mode1, memory_mode2
 from repro.core.sampling import NeighborSampler, seed_loader
-from repro.graph.batch import generate_batch, batch_device_arrays
+from repro.graph.batch import (generate_batch, batch_device_arrays,
+                               compute_level_caps)
 from repro.graph.partition import partition, overlap_ratio
 from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.models.gnn import (decls_gnn, make_train_step,
-                              make_train_step_fused, make_eval_fn)
+                              make_train_step_allfused, make_eval_fn)
 from repro.models.params import init_params, param_bytes
 from repro.train.checkpoint import TrainerCheckpointMixin
 from repro.train.optimizer import make_adamw
@@ -89,8 +90,8 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.opt = make_adamw()
         self.opt_state = self.opt.init(self.params)
         self._step = make_train_step(cfg, self.opt)
-        self._step_fused = (make_train_step_fused(cfg, self.opt)
-                            if cfg.model == "graphsage" else None)
+        self._step_allfused = (make_train_step_allfused(cfg, self.opt)
+                               if cfg.fused_gather_agg else None)
         self._eval = make_eval_fn(cfg)
 
     # ------------------------------------------------------------------
@@ -113,13 +114,23 @@ class A3GNNTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
             self.cache.refresh_rows(ids)
 
     # ------------------------------------------------------------------
-    def _train_fn(self, mb):
-        arrays = batch_device_arrays(mb)
-        if "agg0" in arrays:                   # fused layer-0 batch path
-            self.params, self.opt_state, loss, acc = self._step_fused(
-                self.params, self.opt_state, arrays["h_dst0"],
-                arrays["agg0"], arrays["neigh_idxs"], arrays["labels"])
+    def _train_fn(self, mb, plane=None):
+        if (self._step_allfused is not None and plane is not None
+                and mb.features is None and mb.blocks):
+            # all-hop fused path: level-capped buffers → one jit
+            # signature per (model, level_caps); the input hop is
+            # resolved at step time through the plane (encoded slots +
+            # miss sideband — no feature tensor ever rides the batch)
+            caps = compute_level_caps(len(mb.seeds), self.cfg.fanout,
+                                      self.graph.num_nodes)
+            arrays = batch_device_arrays(mb, level_caps=caps)
+            enc0, aux0, table = plane.fused_inputs(mb.input_ids,
+                                                   arrays["pads"][0])
+            self.params, self.opt_state, loss, acc = self._step_allfused(
+                self.params, self.opt_state, enc0, aux0, table,
+                arrays["neigh_idxs"], arrays["labels"])
         else:
+            arrays = batch_device_arrays(mb)
             self.params, self.opt_state, loss, acc = self._step(
                 self.params, self.opt_state, arrays["features"],
                 arrays["neigh_idxs"], arrays["labels"])

@@ -96,6 +96,21 @@ def resolve_throughput_source(acfg: AutotuneConfig) -> str:
     return src
 
 
+def tuned_runtime_status() -> Dict[str, bool]:
+    """Which scripts/env_tuned.sh host-tuning knobs are live in THIS
+    process: ``tcmalloc`` (LD_PRELOAD carries a tcmalloc build — allocator
+    lock contention shapes the multi-worker wall clock) and
+    ``xla_host_flags`` (host platform pinned to one device, so jit
+    dispatch cost is stable across runs).  Wall-clock MEASURE numbers are
+    comparable only against numbers taken under the same runtime, so the
+    controller stamps this onto every wall-clock episode."""
+    tcmalloc = "tcmalloc" in os.environ.get("LD_PRELOAD", "")
+    xla = "--xla_force_host_platform_device_count" in \
+        os.environ.get("XLA_FLAGS", "")
+    return {"tcmalloc": tcmalloc, "xla_host_flags": xla,
+            "tuned": tcmalloc and xla}
+
+
 def episode_space(acfg: AutotuneConfig) -> Space:
     """The tunable subset of Table I.  γ, Θ, mode, workers — and, when
     gated on, batch size, the sampling device (feature-plane backend) and
@@ -139,6 +154,9 @@ class Episode:
     cache_hit_rate: float
     steps: int
     predicted: Optional[Dict[str, float]] = None   # surrogate view, ep ≥ 1
+    # host-runtime stamp (tuned_runtime_status()) for wall-clock episodes;
+    # None when throughput came from the model (runtime can't skew Eqs. 2/4)
+    tuned_runtime: Optional[Dict[str, bool]] = None
 
 
 @dataclass
@@ -360,11 +378,14 @@ class AutotuneController:
             if c is not None:
                 c.stats.reset()
         stats = self.pipe.run(max_steps=self.acfg.steps_per_episode)
+        runtime = None
         if resolve_throughput_source(self.acfg) == "wallclock":
             # real multi-core host: threads overlap, the wall clock is the
             # truth (stats.steps counts per-partition mini-batches, so this
-            # is already the aggregate fleet rate)
+            # is already the aggregate fleet rate) — stamped with the host
+            # runtime (tcmalloc/XLA flags) it was taken under
             throughput = stats.throughput_steps_per_s()
+            runtime = tuned_runtime_status()
         else:
             st = stats.stage_times()
             step_t = bottleneck_step_time(self.pipe.mode, st,
@@ -384,7 +405,8 @@ class AutotuneController:
                          self.tr, "cache_hit_rate",
                          self.tr.cache.stats.hit_rate
                          if self.tr.cache else 0.0),
-                     steps=stats.steps, predicted=predicted)
+                     steps=stats.steps, predicted=predicted,
+                     tuned_runtime=runtime)
         self._measured_keys.add(_cfg_key(cfg))
         self._push_point(self._encode(cfg), metrics)        # FEEDBACK
         self._refit()

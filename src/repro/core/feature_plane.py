@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.cache import FeatureCache
 from repro.graph.storage import Graph
+from repro.kernels.pad_plan import bucket_plan
 
 # device-plane gather is issued in bounded row chunks: each distinct padded
 # shape costs one jit trace (expensive in interpret mode), so chunking plus
@@ -50,12 +51,12 @@ from repro.graph.storage import Graph
 # regime in ONE dispatch — per-chunk dispatch overhead, not gather
 # bandwidth, dominates the device plane's fixed cost
 GATHER_CHUNK_ROWS = 4096
-_MIN_ROWS = 8
 
 
 def _bucket(n: int) -> int:
-    """Round ``n`` up to a pow2 (≥ 8) so jit retraces stay bounded."""
-    return max(1 << (n - 1).bit_length(), _MIN_ROWS)
+    """Round ``n`` up to a pow2 (≥ 8) so jit retraces stay bounded —
+    memoized through the shared pad-plan cache (kernels/pad_plan.py)."""
+    return bucket_plan(n)
 
 
 def _scatter_update(buf, idx, vals):
@@ -79,7 +80,50 @@ def _scatter(buf, idx, vals):
     return _scatter_update_jit(buf, idx, vals)
 
 
-def _run_fused(enc, neigh_idx, table, aux, use_pallas: bool, interpret: bool):
+def _fused_pack_impl(aux, idx, vals, enc):
+    """Single-dispatch step-input packing: scatter the miss rows into the
+    donated sideband and move the encoding to device ALONGSIDE, in one
+    jitted call.  Per-dispatch overhead (~100 µs on this container) is
+    what made the old 3-conversions-plus-scatter sequence dominate
+    small-batch cost — one dispatch instead of four is most of the
+    small-batch win.  ``idx`` pads to a pow2 bucket with out-of-range
+    entries (``mode="drop"``); padded ``vals`` rows are dropped with
+    them, so their (uninitialized) contents never land in the buffer."""
+    return enc, aux.at[idx].set(vals, mode="drop")
+
+
+_fused_pack_jit = None
+
+
+def _fused_pack(aux, idx, vals, enc):
+    global _fused_pack_jit
+    if _fused_pack_jit is None:
+        import functools
+        import jax
+        _fused_pack_jit = functools.partial(jax.jit, donate_argnums=(0,))(
+            _fused_pack_impl)
+    return _fused_pack_jit(aux, idx, vals, enc)
+
+
+def _host_pack_impl(enc, aux):
+    """Host twin of ``_fused_pack``: one dispatch moves the all-sideband
+    encoding + rows to the step, instead of one conversion each."""
+    return enc, aux
+
+
+_host_pack_jit = None
+
+
+def _host_pack(enc, aux):
+    global _host_pack_jit
+    if _host_pack_jit is None:
+        import jax
+        _host_pack_jit = jax.jit(_host_pack_impl)
+    return _host_pack_jit(enc, aux)
+
+
+def _run_fused(enc, neigh_idx, table, aux, use_pallas: bool, interpret: bool,
+               mode: str = "mean"):
     """Bucket the fused gather+aggregate inputs to pow2 row counts (jit
     retraces stay bounded across the batch-size schedule) and slice the
     padding back off.  ``enc`` pads with -1 (→ ``aux[0]``, never referenced
@@ -98,7 +142,8 @@ def _run_fused(enc, neigh_idx, table, aux, use_pallas: bool, interpret: bool):
     aux_p[:len(aux)] = aux
     h, a = gather_aggregate(jnp.asarray(enc_p), jnp.asarray(idx_p),
                             jnp.asarray(table), jnp.asarray(aux_p),
-                            use_pallas=use_pallas, interpret=interpret)
+                            mode=mode, use_pallas=use_pallas,
+                            interpret=interpret)
     return np.asarray(h)[:nd], np.asarray(a)[:nd]
 
 
@@ -117,19 +162,35 @@ class FeaturePlane:
         self.graph = graph
         self.cache = cache
         self.store = None               # attached FeatureStore (subscribe_to)
+        # per-batch gather counters — the read-side twin of the device
+        # plane's sync_* upload counters.  Every plane read (``fetch``,
+        # the fused ``gather_aggregate`` read, the step-time
+        # ``fused_inputs``) ticks them: ``gather_dispatches`` counts
+        # gather invocations (device plane: one per kernel dispatch, so
+        # "one dispatch per batch" is an assertable claim; host plane:
+        # one per plane call, the numpy gather has no finer dispatch
+        # granularity); ``gather_rows`` counts the rows those dispatches
+        # resolved.
+        self.gather_dispatches = 0
+        self.gather_rows = 0
+        self._fused_table = None        # host fused_inputs' 1-row dummy
 
     # -- reads ---------------------------------------------------------------
     def fetch(self, ids: np.ndarray) -> np.ndarray:
         """Gather features for ``ids`` (n,) → (n, F) float32."""
+        self.gather_dispatches += 1
+        self.gather_rows += len(ids)
         if self.cache is not None:
             return self.cache.fetch(ids)
         return self.graph.features[np.asarray(ids, dtype=np.int64)]
 
-    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray):
+    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray,
+                         mode: str = "mean"):
         """Fused layer-0 read (``GNNConfig.fused_gather_agg``): resolve the
-        input-hop rows and the masked neighbor mean in one kernel call,
-        returning ``(h_dst (n_dst, F), agg (n_dst, F))`` where ``n_dst =
-        neigh_idx.shape[0]`` (dst ids are the prefix of ``ids``).
+        input-hop rows and the masked neighbor aggregate (``mode``: mean
+        or sum) in one kernel call, returning ``(h_dst (n_dst, F), agg
+        (n_dst, F))`` where ``n_dst = neigh_idx.shape[0]`` (dst ids are
+        the prefix of ``ids``).
 
         Host backend: fetch through the cache (same accounting as
         ``fetch`` — stats-exactness is a tested invariant) and run the
@@ -137,11 +198,39 @@ class FeaturePlane:
         backends compute the aggregate from bitwise-identical resolved
         rows — the cpu/device bit-exactness anchor."""
         ids = np.asarray(ids, dtype=np.int64)
-        rows = self.fetch(ids)
+        rows = self.fetch(ids)           # counts the gather_* traffic
         enc = -np.arange(1, len(ids) + 1, dtype=np.int32)
         table = np.zeros((1, self.graph.feat_dim), np.float32)
         return _run_fused(enc, neigh_idx, table, rows,
-                          use_pallas=False, interpret=False)
+                          use_pallas=False, interpret=False, mode=mode)
+
+    def fused_inputs(self, ids: np.ndarray, cap: int):
+        """Encoded layer-0 inputs for the all-hop fused train step
+        (models/gnn.py ``make_train_step_allfused``): ``(enc (cap,) int32,
+        aux (cap, F) float32, table)`` padded to the FIXED input-level cap
+        (graph/batch.py ``compute_level_caps``) so every batch hits one
+        jit signature.  Padded enc entries are -1 → ``aux[0]``, never
+        referenced by a real dst row.
+
+        Host backend: all-sideband encoding — rows are fetched through the
+        cache (same accounting as ``fetch``), ``enc[i] = -(i+1)`` and the
+        table is a 1-row dummy, so the step resolves bitwise-identical
+        rows to the device plane's slot encoding."""
+        import jax.numpy as jnp
+        ids = np.asarray(ids, dtype=np.int64)
+        n = len(ids)
+        if n > cap:
+            raise ValueError(f"{n} input ids exceed level cap {cap}")
+        rows = self.fetch(ids)           # counts the gather_* traffic
+        enc = np.full(cap, -1, np.int32)
+        enc[:n] = -np.arange(1, n + 1, dtype=np.int32)
+        aux = np.zeros((cap, self.graph.feat_dim), np.float32)
+        aux[:n] = rows
+        if self._fused_table is None:
+            self._fused_table = jnp.zeros((1, self.graph.feat_dim),
+                                          jnp.float32)
+        enc_dev, aux_dev = _host_pack(enc, aux)
+        return enc_dev, aux_dev, self._fused_table
 
     # -- writes (halo fills / streaming updates) -----------------------------
     def subscribe_to(self, store) -> "FeaturePlane":
@@ -257,6 +346,12 @@ class DeviceFeaturePlane(FeaturePlane):
         self.sync_row_scatters = 0
         self.sync_rows_scattered = 0
         self.sync_bytes_uploaded = 0    # host→device mirror traffic, exact
+        # per-cap persistent aux sidebands for the all-hop fused path:
+        # miss rows are scattered into a donated device buffer instead of
+        # re-uploading a (cap, F) tensor per batch — the whole point of
+        # the encoded-slot contract is that per-batch feature traffic is
+        # O(misses), not O(cap)
+        self._aux_bufs = {}
         # mode1 batch-gen workers share the plane: the mirror delete +
         # re-upload must never race a gather in another thread (a deleted
         # buffer mid-kernel is fatal, unlike the host path's benign numpy
@@ -365,6 +460,8 @@ class DeviceFeaturePlane(FeaturePlane):
         # store while the device works through the resident-row gathers
         miss_ids = ids[miss]
         host_rows = self.graph.features[miss_ids] if len(miss_ids) else None
+        self.gather_dispatches += len(pending)
+        self.gather_rows += n
         for a, m, rows in pending:
             out[a:a + m] = np.asarray(rows)[:m]      # blocks per chunk
         if len(miss_ids):
@@ -374,7 +471,8 @@ class DeviceFeaturePlane(FeaturePlane):
         c.account_fetch(~miss, miss_ids)
         return out
 
-    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray):
+    def gather_aggregate(self, ids: np.ndarray, neigh_idx: np.ndarray,
+                         mode: str = "mean"):
         """Fused layer-0 read against the device mirror: resident rows are
         addressed by cache slot (no batch feature tensor materializes on
         the kernel path), misses ride the host-gathered ``aux`` sideband.
@@ -383,7 +481,7 @@ class DeviceFeaturePlane(FeaturePlane):
         ids = np.asarray(ids, dtype=np.int64)
         c = self.cache
         if c is None or not c.capacity:
-            return super().gather_aggregate(ids, neigh_idx)
+            return super().gather_aggregate(ids, neigh_idx, mode=mode)
         with self._lock:
             self._ensure_synced()
             slots = c.device_map[ids]
@@ -394,12 +492,64 @@ class DeviceFeaturePlane(FeaturePlane):
             enc[~hit] = -np.arange(1, len(miss_ids) + 1, dtype=np.int32)
             aux = (self.graph.features[miss_ids] if len(miss_ids)
                    else np.zeros((0, self.graph.feat_dim), np.float32))
+            self.gather_dispatches += 1
+            self.gather_rows += len(ids)
             out = _run_fused(enc, neigh_idx, self._dev_table, aux,
                              use_pallas=self.use_pallas,
-                             interpret=self.interpret)
+                             interpret=self.interpret, mode=mode)
             # same accounting seam as _fetch_locked (stats-exact invariant)
             c.account_fetch(hit, miss_ids)
         return out
+
+    def fused_inputs(self, ids: np.ndarray, cap: int):
+        """Device twin of the host ``fused_inputs``: resident rows are
+        encoded as cache-table slots (``enc >= 0`` — ZERO feature bytes
+        move for them), misses are scattered into a persistent per-cap
+        device sideband through the donated ``_scatter`` path, so
+        per-batch feature traffic is O(miss rows), never O(cap).  The
+        returned ``table`` is the live device mirror — (capacity+pad, F)
+        is a fixed shape, so every batch hits the one jitted step
+        signature.
+
+        The consuming train step must be serialized (the trainers block
+        on ``float(loss)`` per step) — the sideband buffer is donated on
+        the NEXT batch's scatter, which must not race an in-flight step."""
+        ids = np.asarray(ids, dtype=np.int64)
+        c = self.cache
+        if c is None or not c.capacity:
+            return super().fused_inputs(ids, cap)
+        import jax.numpy as jnp
+        n = len(ids)
+        if n > cap:
+            raise ValueError(f"{n} input ids exceed level cap {cap}")
+        with self._lock:
+            self._ensure_synced()
+            slots = c.device_map[ids]
+            hit = slots >= 0
+            miss_ids = ids[~hit]
+            enc = np.full(cap, -1, np.int32)
+            enc[:n][hit] = slots[hit]
+            enc[:n][~hit] = -np.arange(1, len(miss_ids) + 1, dtype=np.int32)
+            aux = self._aux_bufs.get(cap)
+            if aux is None:
+                aux = jnp.zeros((cap, self.graph.feat_dim), jnp.float32)
+            # pow2-padded miss scatter with out-of-range pad indices
+            # (dropped — padded vals rows never land in the buffer), same
+            # discipline as the mirror sync; m == 0 rides the minimal
+            # bucket so EVERY batch is exactly one packing dispatch
+            m = len(miss_ids)
+            p = min(_bucket(max(m, 1)), cap)
+            idx = np.full(p, cap, np.int32)
+            idx[:m] = np.arange(m, dtype=np.int32)
+            vals = np.empty((p, self.graph.feat_dim), np.float32)
+            if m:
+                vals[:m] = self.graph.features[miss_ids]
+            enc_dev, aux = _fused_pack(aux, idx, vals, enc)
+            self._aux_bufs[cap] = aux
+            self.gather_dispatches += 1
+            self.gather_rows += n
+            c.account_fetch(hit, miss_ids)
+            return enc_dev, aux, self._dev_table
 
     def fill_rows(self, ids: np.ndarray, rows: np.ndarray):
         with self._lock:

@@ -51,14 +51,15 @@ from repro.core.perf_model import (MemoryTerms, bottleneck_step_time,
 from repro.core.pipeline import Pipeline, PipelineStats
 from repro.core.sampling import NeighborSampler, seed_loader
 from repro.distributed.collectives import grad_allreduce, halo_all_to_all
-from repro.graph.batch import generate_batch, batch_device_arrays
+from repro.graph.batch import (generate_batch, batch_device_arrays,
+                               compute_level_caps)
 from repro.graph.partition import (PartitionPlan, RebalanceResult,
                                    assignment_cut_fraction,
                                    incremental_rebalance, plan_partitions)
 from repro.graph.storage import FeatureStreamConsumer, Graph
 from repro.launch.mesh import make_partition_mesh
 from repro.models.gnn import (decls_gnn, make_apply_fn, make_eval_fn,
-                              make_grad_fn, make_grad_fn_fused)
+                              make_grad_fn, make_grad_fn_allfused)
 from repro.models.params import init_params, param_bytes
 from repro.train.checkpoint import CheckpointManager, TrainerCheckpointMixin
 from repro.train.fault_tolerance import SupervisorReport, TrainSupervisor
@@ -233,8 +234,11 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
         self.opt = make_adamw()
         self.opt_state = self.opt.init(self.params)
         self._grad = make_grad_fn(cfg)
-        self._grad_fused = (make_grad_fn_fused(cfg)
-                            if cfg.model == "graphsage" else None)
+        # one all-fused grad fn shared by every slot: the level caps are
+        # slot-independent (cap growth only depends on batch × fanout,
+        # clamped per-slot below), so slots share compiled signatures
+        self._grad_allfused = (make_grad_fn_allfused(cfg)
+                               if cfg.fused_gather_agg else None)
         self._apply = make_apply_fn(cfg, self.opt)
         self._eval = make_eval_fn(cfg)
         self.slots = [self._make_slot(p, sub) for p, sub in
@@ -353,17 +357,24 @@ class MultiPartitionTrainer(TrainerCheckpointMixin, FeatureStreamConsumer):
     def _slot_train_fn(self, slot: PartitionSlot):
         """Per-partition "train" = local gradient computation; the shared
         update is applied after the cross-partition all-reduce."""
-        def fn(mb):
+        def fn(mb, plane=None):
             hs = slot.halo_stats
             hs.halo_hits += int((mb.input_ids >= slot.n_owned).sum())
             hs.inputs += len(mb.input_ids)
             hs.batches += 1
-            arrays = batch_device_arrays(mb)
-            if "agg0" in arrays:               # fused layer-0 batch path
-                grads, loss, acc = self._grad_fused(
-                    self.params, arrays["h_dst0"], arrays["agg0"],
+            if (self._grad_allfused is not None and plane is not None
+                    and mb.features is None and mb.blocks):
+                # all-hop fused path (see A3GNNTrainer._train_fn)
+                caps = compute_level_caps(len(mb.seeds), self.cfg.fanout,
+                                          slot.graph.num_nodes)
+                arrays = batch_device_arrays(mb, level_caps=caps)
+                enc0, aux0, table = plane.fused_inputs(mb.input_ids,
+                                                       arrays["pads"][0])
+                grads, loss, acc = self._grad_allfused(
+                    self.params, enc0, aux0, table,
                     arrays["neigh_idxs"], arrays["labels"])
             else:
+                arrays = batch_device_arrays(mb)
                 grads, loss, acc = self._grad(self.params,
                                               arrays["features"],
                                               arrays["neigh_idxs"],

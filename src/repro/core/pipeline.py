@@ -30,6 +30,7 @@ controller's drain → reconfigure → resume contract):
 """
 from __future__ import annotations
 
+import inspect
 import queue
 import threading
 import time
@@ -134,10 +135,15 @@ class Pipeline:
         self.weight_fn = weight_fn
         self.seed = seed
         self.mode = cfg.parallel_mode
-        # fused layer-0 batch generation (GraphSAGE only; other models
-        # keep the unfused feature-tensor path)
-        self.fused = (getattr(cfg, "fused_gather_agg", False)
-                      and getattr(cfg, "model", "") == "graphsage")
+        # all-hop fused batch generation (any model family): feature work
+        # is DEFERRED to the train step, which resolves the input hop
+        # through FeaturePlane.fused_inputs (encoded slots + sideband)
+        self.fused = getattr(cfg, "fused_gather_agg", False)
+        # fused train fns take (mb, plane) so step-time encoding reads
+        # the LIVE plane (reconfigure may swap it); legacy single-arg
+        # train fns keep working unchanged
+        self._train_wants_plane = (
+            len(inspect.signature(train_fn).parameters) >= 2)
         self.workers_n = max(cfg.workers, 1)
         self.batch_size = cfg.batch_size
         self.stats = PipelineStats()
@@ -240,7 +246,7 @@ class Pipeline:
             mb = generate_batch(mb, self.plane, self.graph,
                                 fused=self.fused)
             t2 = time.perf_counter()
-            loss, acc = self.train_fn(mb)
+            loss, acc = self._train(mb)
             t3 = time.perf_counter()
             with self._lock:
                 st = self.stats
@@ -273,11 +279,16 @@ class Pipeline:
             with self._lock:
                 self.stats.t_batch += time.perf_counter() - t0
         t0 = time.perf_counter()
-        loss, acc = self.train_fn(mb)
+        loss, acc = self._train(mb)
         t1 = time.perf_counter()
         with self._lock:
             self._record_train(self.stats, mb, loss, acc, t1 - t0)
         return True
+
+    def _train(self, mb):
+        if self._train_wants_plane:
+            return self.train_fn(mb, self.plane)
+        return self.train_fn(mb)
 
     def _record_train(self, st: PipelineStats, mb, loss, acc, dt: float):
         st.t_train += dt

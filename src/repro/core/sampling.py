@@ -71,11 +71,8 @@ class MiniBatch:
     seeds: np.ndarray            # (batch,)
     labels: np.ndarray           # (batch,)
     features: Optional[np.ndarray] = None   # filled by batch generation
-    # fused batch generation (GNNConfig.fused_gather_agg): layer-0
-    # pre-aggregates instead of the (n_src0, F) feature tensor —
-    # dst-prefix rows and the masked neighbor mean, both (n_dst0, F)
-    fused_h_dst: Optional[np.ndarray] = None
-    fused_agg: Optional[np.ndarray] = None
+    # (stays None under GNNConfig.fused_gather_agg — the trainer resolves
+    # the input hop at step time through FeaturePlane.fused_inputs)
     # graph topology version the batch was sampled at (dynamic graphs:
     # lets downstream consumers detect batches drawn before a mutation)
     topology_version: int = -1

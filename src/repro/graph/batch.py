@@ -29,20 +29,36 @@ def generate_batch(mb: MiniBatch,
     hot path) or, for back-compat, a bare ``FeatureCache``; ``None`` reads
     the host store directly (evaluation paths).
 
-    ``fused=True`` (``GNNConfig.fused_gather_agg``, GraphSAGE layer 0)
-    routes through ``FeaturePlane.gather_aggregate`` instead: the batch
-    carries the layer-0 pre-aggregates (``fused_h_dst``, ``fused_agg``)
-    and ``features`` stays ``None`` — the input-hop tensor never
-    materializes."""
+    ``fused=True`` (``GNNConfig.fused_gather_agg``) DEFERS the feature
+    work entirely: the batch is returned with ``features=None`` and the
+    trainer resolves the input hop at step time through
+    ``FeaturePlane.fused_inputs`` (encoded slots + miss sideband) — the
+    (n_src0, F) input tensor never materializes, and encoding at step
+    time means the slot references can never go stale between batch
+    generation and the jitted step consuming them."""
     if fused and plane is not None and mb.blocks:
-        h_dst, agg = plane.gather_aggregate(mb.input_ids,
-                                            mb.blocks[0].neigh_idx)
-        return dataclasses.replace(mb, fused_h_dst=h_dst, fused_agg=agg)
+        return mb
     if plane is not None:
         feats = plane.fetch(mb.input_ids)
     else:
         feats = graph.features[mb.input_ids]
     return dataclasses.replace(mb, features=feats)
+
+
+def compute_level_caps(batch: int, fanouts: Sequence[int],
+                       num_nodes: int) -> list:
+    """Fixed per-node-level caps (input-hop first, same order as
+    ``batch_device_arrays`` ``sizes``): level i+1 can grow at most
+    ``(1 + fanout)`` over level i (dst ∪ sampled, dedup only shrinks),
+    and never beyond the graph.  One cap vector → ONE jit signature per
+    (model, level_caps) across the whole batch-size schedule — the
+    serving engines and the all-hop fused train step share this
+    discipline (and therefore share compiled signatures)."""
+    caps = [int(batch)]
+    for f in fanouts:
+        caps.append(min(caps[-1] * (1 + int(f)), int(num_nodes)))
+    caps.reverse()                            # input-hop level first
+    return caps
 
 
 def _pow2(n: int) -> int:
@@ -94,18 +110,15 @@ def batch_device_arrays(mb: MiniBatch, pad_seed_level: bool = False,
         "neigh_idxs": neigh_idxs,
         "labels": mb.labels.astype(np.int32),
         "sizes": sizes,
+        "pads": pads,
         # sampled-at topology version rides along (dynamic graphs:
         # consumers can audit which adjacency a batch was drawn from)
         "topology_version": mb.topology_version,
     }
-    if mb.fused_agg is not None:
-        # fused batch generation: layer-0 pre-aggregates replace the
-        # input-hop feature tensor; both pad to the DST level of hop 0
-        # (zero rows — they never reach the loss, which slices to seeds)
-        for key, arr in (("h_dst0", mb.fused_h_dst), ("agg0", mb.fused_agg)):
-            pad = np.zeros((pads[1], arr.shape[1]), np.float32)
-            pad[:sizes[1]] = arr
-            out[key] = pad
+    if mb.features is None:
+        # deferred fused batch (generate_batch(fused=True)): the input
+        # hop is resolved at step time via FeaturePlane.fused_inputs
+        # against pads[0] — no feature tensor rides the batch
         return out
     feats = mb.features
     fpad = np.zeros((pads[0], feats.shape[1]), feats.dtype)
@@ -135,8 +148,6 @@ def inference_arrays(mb: MiniBatch,
 def batch_bytes(mb: MiniBatch) -> int:
     """B term of Eq. (3): bytes of the generated mini-batch."""
     total = mb.features.nbytes if mb.features is not None else 0
-    if mb.fused_agg is not None:
-        total += mb.fused_agg.nbytes + mb.fused_h_dst.nbytes
     for blk in mb.blocks:
         total += blk.neigh_idx.nbytes + blk.src_ids.nbytes + blk.dst_ids.nbytes
     return total + mb.labels.nbytes

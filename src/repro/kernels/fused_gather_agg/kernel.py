@@ -39,7 +39,7 @@ def _resolve(enc, cache_ref, aux_ref):
 
 
 def _fused_kernel(enc_ref, idx_ref, cache_ref, aux_ref, hdst_ref, agg_ref, *,
-                  rows_per_block: int, fanout: int):
+                  rows_per_block: int, fanout: int, mode: str):
     base = pl.program_id(0) * rows_per_block        # enc/idx are unblocked
     for r in range(rows_per_block):                 # static row unroll
         # self term: the dst ids are the prefix of the input ids
@@ -55,17 +55,19 @@ def _fused_kernel(enc_ref, idx_ref, cache_ref, aux_ref, hdst_ref, agg_ref, *,
             nrow = _resolve(enc_ref[safe], cache_ref, aux_ref)
             acc = acc + jnp.where(valid, nrow, 0.0)
             cnt = cnt + jnp.where(valid, 1.0, 0.0)
-        mean = acc / jnp.maximum(cnt, 1.0)
+        agg = acc / jnp.maximum(cnt, 1.0) if mode == "mean" else acc
         pl.store(agg_ref, (pl.dslice(r, 1), slice(None)),
-                 mean.astype(agg_ref.dtype))
+                 agg.astype(agg_ref.dtype))
 
 
 def gather_aggregate_pallas(enc: jnp.ndarray, neigh_idx: jnp.ndarray,
                             cache: jnp.ndarray, aux: jnp.ndarray,
+                            mode: str = "mean",
                             rows_per_block: int = 8, block_f: int = 512,
                             interpret: bool = True):
     """enc (Ns,) int32; neigh_idx (Nd, fanout) int32 (−1 pad, values in
-    [0, Ns)); cache (C, F); aux (Na, F) → (h_dst (Nd, F), agg (Nd, F))."""
+    [0, Ns)); cache (C, F); aux (Na, F) → (h_dst (Nd, F), agg (Nd, F));
+    ``mode`` is ``mean`` (GraphSAGE/GCN) or ``sum`` (GIN)."""
     Ns = enc.shape[0]
     Nd, fanout = neigh_idx.shape
     C, F = cache.shape
@@ -73,7 +75,7 @@ def gather_aggregate_pallas(enc: jnp.ndarray, neigh_idx: jnp.ndarray,
     assert Nd % rows_per_block == 0 and F % block_f == 0 and Ns >= Nd
     grid = (Nd // rows_per_block, F // block_f)
     kernel = functools.partial(_fused_kernel, rows_per_block=rows_per_block,
-                               fanout=fanout)
+                               fanout=fanout, mode=mode)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,

@@ -1,5 +1,5 @@
 """jit wrapper: pad ids/dst rows to the id block (and F to the feature
-block), dispatch kernel/ref.
+block) through the memoized pad plan, dispatch kernel/ref.
 
 Contract (shared with ref.py, regression-tested in tests/test_fused_agg.py):
 ``enc (Ns,) int32`` encodes where each input id's feature row lives —
@@ -8,7 +8,8 @@ of the ``aux`` sideband (host-gathered misses; must have ≥ 1 row).
 ``neigh_idx (Nd, fanout)`` indexes the input ids (−1 = pad), the dst ids
 being the prefix of the input ids (``Nd ≤ Ns``).  Returns
 ``(h_dst (Nd, F), agg (Nd, F))`` — the self rows and the masked neighbor
-mean — without ever materializing the (Ns, F) batch tensor on the kernel
+aggregate (``mode``: ``mean`` for GraphSAGE/GCN layer 0, ``sum`` for GIN)
+— without ever materializing the (Ns, F) batch tensor on the kernel
 path.  Padded dst rows are sliced away; padded enc entries resolve to
 ``aux[0]`` and are never referenced by a real dst row.
 """
@@ -21,33 +22,37 @@ import jax.numpy as jnp
 
 from repro.kernels.fused_gather_agg.kernel import gather_aggregate_pallas
 from repro.kernels.fused_gather_agg.ref import gather_aggregate_ref
+from repro.kernels.pad_plan import feat_plan, pad_plan, row_plan
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def gather_aggregate(enc, neigh_idx, cache, aux, use_pallas: bool = True,
-                     interpret: bool = True):
+def _id_plan(Nd: int, Ns: int):
+    """(padded Nd, padded Ns): both block multiples, Ns ≥ Nd."""
+    def compute():
+        ndp = row_plan(Nd)
+        return ndp, max(row_plan(Ns), ndp)
+    return pad_plan("fused_ids", (Nd, Ns), compute)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "use_pallas", "interpret"))
+def gather_aggregate(enc, neigh_idx, cache, aux, mode: str = "mean",
+                     use_pallas: bool = True, interpret: bool = True):
     Nd, fanout = neigh_idx.shape
     Ns = enc.shape[0]
     C, F = cache.shape
-    ndp = -(-Nd // 8) * 8
-    nsp = max(-(-Ns // 8) * 8, ndp)
+    ndp, nsp = _id_plan(Nd, Ns)
     enc_p = jnp.pad(enc.astype(jnp.int32), (0, nsp - Ns),
                     constant_values=-1)
     idx_p = jnp.pad(neigh_idx.astype(jnp.int32), ((0, ndp - Nd), (0, 0)),
                     constant_values=-1)
     if use_pallas:
-        # feature blocking: full-width when one block suffices, else a
-        # lane-aligned block size that divides the (padded) width
-        if F <= 512:
-            block_f, fp = F, F
-        else:
-            block_f = 512 if F % 512 == 0 else 128
-            fp = -(-F // block_f) * block_f
+        block_f, fp = feat_plan(F)
         cache_p = cache if fp == F else jnp.pad(cache, ((0, 0), (0, fp - F)))
         aux_p = aux if fp == F else jnp.pad(aux, ((0, 0), (0, fp - F)))
         h, a = gather_aggregate_pallas(enc_p, idx_p, cache_p, aux_p,
-                                       block_f=block_f, interpret=interpret)
+                                       mode=mode, block_f=block_f,
+                                       interpret=interpret)
         h, a = h[:, :F], a[:, :F]
     else:
-        h, a = gather_aggregate_ref(enc_p, idx_p, cache, aux)
+        h, a = gather_aggregate_ref(enc_p, idx_p, cache, aux, mode=mode)
     return h[:Nd].astype(cache.dtype), a[:Nd].astype(cache.dtype)

@@ -1,17 +1,24 @@
 """Pure-jnp oracle for the fused gather + aggregate (and the XLA fast
 path on CPU hosts): resolve encoded slots against (cache, aux), take the
-dst prefix, and reuse the segment-agg oracle for the masked mean."""
+dst prefix, and reuse the segment-agg oracle for the masked aggregation
+(``mean`` — GraphSAGE/GCN layer 0; ``sum`` — GIN layer 0)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.segment_agg.ref import neighbor_mean_ref
+from repro.kernels.segment_agg.ref import neighbor_agg_ref
 
 
-def gather_aggregate_ref(enc, neigh_idx, cache, aux):
+def resolve_rows_ref(enc, cache, aux):
+    """Encoded-slot resolve: ``enc[i] >= 0`` → cache slot, ``enc[i] < 0``
+    → row ``-enc[i]-1`` of the ``aux`` sideband."""
     hit = enc >= 0
-    rows = jnp.where(hit[:, None],
+    return jnp.where(hit[:, None],
                      cache[jnp.maximum(enc, 0)],
                      aux[jnp.maximum(-enc - 1, 0)])
+
+
+def gather_aggregate_ref(enc, neigh_idx, cache, aux, mode: str = "mean"):
+    rows = resolve_rows_ref(enc, cache, aux)
     h_dst = rows[:neigh_idx.shape[0]]
-    return h_dst, neighbor_mean_ref(neigh_idx, rows)
+    return h_dst, neighbor_agg_ref(neigh_idx, rows, mode=mode)

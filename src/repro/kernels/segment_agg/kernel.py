@@ -1,9 +1,13 @@
-"""Pallas kernel: masked neighbor-mean aggregation (GraphSAGE hot-spot).
+"""Pallas kernel: masked neighbor aggregation (the per-hop GNN hot-spot).
 
 TPU adaptation of the CSR SpMM the GPU frameworks use: the sampler's
-fixed-fanout padded blocks turn aggregation into a dense masked gather-mean —
+fixed-fanout padded blocks turn aggregation into a dense masked gather —
 grid (dst_blocks, feature_blocks), neighbor indices scalar-prefetched, one
 VMEM accumulator per dst row.  -1 indices are padding (masked out).
+
+Three aggregation families behind one kernel (models/gnn.py's fused
+per-hop path): ``mean`` (GraphSAGE/GCN), ``sum`` (GIN) and weighted sum
+(GAT — per-edge attention weights ride along as a VMEM input).
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 
-def _agg_kernel(idx_ref, h_ref, out_ref, *, rows_per_block: int, fanout: int):
+def _agg_kernel(idx_ref, h_ref, out_ref, *, rows_per_block: int, fanout: int,
+                mode: str):
     base = pl.program_id(0) * rows_per_block        # idx_ref is unblocked
     for r in range(rows_per_block):                 # static row unroll
         acc = jnp.zeros((1, out_ref.shape[-1]), jnp.float32)
@@ -27,22 +32,59 @@ def _agg_kernel(idx_ref, h_ref, out_ref, *, rows_per_block: int, fanout: int):
             row = pl.load(h_ref, (pl.dslice(safe, 1), slice(None)))
             acc = acc + jnp.where(valid, row.astype(jnp.float32), 0.0)
             cnt = cnt + jnp.where(valid, 1.0, 0.0)
-        mean = acc / jnp.maximum(cnt, 1.0)
+        agg = acc / jnp.maximum(cnt, 1.0) if mode == "mean" else acc
         pl.store(out_ref, (pl.dslice(r, 1), slice(None)),
-                 mean.astype(out_ref.dtype))
+                 agg.astype(out_ref.dtype))
 
 
-def neighbor_mean_pallas(neigh_idx: jnp.ndarray, h_src: jnp.ndarray,
-                         rows_per_block: int = 8, block_f: int = 256,
-                         interpret: bool = True):
-    """neigh_idx (Nd, fanout) int32 (−1 pad); h_src (Ns, F) → (Nd, F)."""
+def _agg_kernel_weighted(idx_ref, h_ref, w_ref, out_ref, *,
+                         rows_per_block: int, fanout: int):
+    base = pl.program_id(0) * rows_per_block
+    for r in range(rows_per_block):
+        acc = jnp.zeros((1, out_ref.shape[-1]), jnp.float32)
+        for f in range(fanout):
+            idx = idx_ref[base + r, f]
+            valid = idx >= 0
+            safe = jnp.maximum(idx, 0)
+            row = pl.load(h_ref, (pl.dslice(safe, 1), slice(None)))
+            w = w_ref[r, f].astype(jnp.float32)
+            acc = acc + jnp.where(valid, w * row.astype(jnp.float32), 0.0)
+        pl.store(out_ref, (pl.dslice(r, 1), slice(None)),
+                 acc.astype(out_ref.dtype))
+
+
+def neighbor_agg_pallas(neigh_idx: jnp.ndarray, h_src: jnp.ndarray,
+                        mode: str = "mean", weights=None,
+                        rows_per_block: int = 8, block_f: int = 256,
+                        interpret: bool = True):
+    """neigh_idx (Nd, fanout) int32 (−1 pad); h_src (Ns, F);
+    weights (Nd, fanout) float or None → (Nd, F)."""
     Nd, fanout = neigh_idx.shape
     Ns, F = h_src.shape
     block_f = min(block_f, F)
     assert Nd % rows_per_block == 0 and F % block_f == 0
     grid = (Nd // rows_per_block, F // block_f)
+    if weights is not None:
+        kernel = functools.partial(_agg_kernel_weighted,
+                                   rows_per_block=rows_per_block,
+                                   fanout=fanout)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((Ns, block_f), lambda i, f, idx: (0, f)),
+                      pl.BlockSpec((rows_per_block, fanout),
+                                   lambda i, f, idx: (i, 0))],
+            out_specs=pl.BlockSpec((rows_per_block, block_f),
+                                   lambda i, f, idx: (i, f)),
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((Nd, F), h_src.dtype),
+            interpret=interpret,
+        )(neigh_idx, h_src, weights.astype(h_src.dtype))
     kernel = functools.partial(_agg_kernel, rows_per_block=rows_per_block,
-                               fanout=fanout)
+                               fanout=fanout, mode=mode)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -56,3 +98,12 @@ def neighbor_mean_pallas(neigh_idx: jnp.ndarray, h_src: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((Nd, F), h_src.dtype),
         interpret=interpret,
     )(neigh_idx, h_src)
+
+
+def neighbor_mean_pallas(neigh_idx: jnp.ndarray, h_src: jnp.ndarray,
+                         rows_per_block: int = 8, block_f: int = 256,
+                         interpret: bool = True):
+    """neigh_idx (Nd, fanout) int32 (−1 pad); h_src (Ns, F) → (Nd, F)."""
+    return neighbor_agg_pallas(neigh_idx, h_src, mode="mean",
+                               rows_per_block=rows_per_block,
+                               block_f=block_f, interpret=interpret)

@@ -1,12 +1,39 @@
-"""Pure-jnp oracle: masked neighbor mean (matches models/gnn._mean_agg)."""
+"""Pure-jnp oracles: masked neighbor aggregation over fixed-fanout blocks.
+
+``neighbor_mean_ref`` matches models/gnn._mean_agg bitwise (the original
+GraphSAGE regression anchor).  ``neighbor_agg_ref`` generalizes the same
+expressions to the three aggregation families the fused pipeline serves:
+
+  * ``mean``      — GraphSAGE / GCN (masked mean, empty rows → 0)
+  * ``sum``       — GIN (masked sum)
+  * ``weights``   — GAT (per-edge attention weights, applied to the
+    masked gathered rows before the sum; pass ``mode="sum"``)
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def neighbor_mean_ref(neigh_idx, h_src):
+def neighbor_agg_ref(neigh_idx, h_src, mode: str = "mean", weights=None):
+    """neigh_idx (Nd, fanout) int32 (−1 pad); h_src (Ns, F);
+    weights (Nd, fanout) or None → (Nd, F)."""
     mask = neigh_idx >= 0
     nb = h_src[jnp.maximum(neigh_idx, 0)]
     nb = nb * mask[..., None].astype(h_src.dtype)
-    cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(h_src.dtype)
-    return nb.sum(1) / cnt
+    if weights is not None:
+        if mode != "sum":
+            # attention weights already normalize (softmax over the edge
+            # set) — a second /count would double-normalize, and the
+            # Pallas kernel only implements the weighted SUM
+            raise ValueError("per-edge weights imply mode='sum'")
+        nb = nb * weights[..., None].astype(h_src.dtype)
+    if mode == "sum":
+        return nb.sum(1)
+    if mode == "mean":
+        cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(h_src.dtype)
+        return nb.sum(1) / cnt
+    raise ValueError(f"unknown aggregation mode: {mode!r}")
+
+
+def neighbor_mean_ref(neigh_idx, h_src):
+    return neighbor_agg_ref(neigh_idx, h_src, mode="mean")

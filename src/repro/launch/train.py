@@ -96,6 +96,8 @@ def run_gnn(args):
         cfg = cfg.replace(rebalance_drift=args.rebalance_drift)
     if args.sampling_device is not None:
         cfg = cfg.replace(sampling_device=args.sampling_device)
+    if args.fused_gather_agg:
+        cfg = cfg.replace(fused_gather_agg=True)
     cfg = apply_baseline(cfg, args.baseline)
     graph = dataset_like(cfg, seed=args.seed)
     print(f"[data] {graph.name}: {graph.num_nodes} nodes, "
@@ -218,6 +220,13 @@ def main():
                     help="feature-plane backend for batch generation: "
                          "cpu (numpy cache), device (Pallas cache gather), "
                          "auto (probe jax.devices())")
+    ap.add_argument("--fused-gather-agg", action="store_true",
+                    help="all-hop fused device pipeline: batch generation "
+                         "defers feature work to the train step, which "
+                         "resolves the input hop from encoded cache slots "
+                         "+ a miss sideband and aggregates every hop in "
+                         "place (one jit signature per model/level_caps; "
+                         "all model families, bit-exact with unfused)")
     ap.add_argument("--autotune", action="store_true",
                     help="run the online auto-tuning controller (§III-C)")
     ap.add_argument("--episodes-autotune", type=int, default=4)

@@ -47,7 +47,8 @@ import numpy as np
 
 from repro.core.feature_plane import FeaturePlane, make_feature_plane
 from repro.core.sampling import NeighborSampler
-from repro.graph.batch import generate_batch, inference_arrays
+from repro.graph.batch import (generate_batch, inference_arrays,
+                               compute_level_caps)
 from repro.graph.storage import Graph
 from repro.serve.common import EngineBase, admit_pending
 
@@ -116,15 +117,11 @@ class GNNInferenceEngine(EngineBase):
         self._init_serving(batch, keep_completed, retire_hook)
         self.running: Dict[int, GNNRequest] = {}   # slot -> request
         # fixed per-level pad caps → ONE jit signature for this engine's
-        # forward, ever.  Walk outward from the seeds (the sampler's hop
-        # order): each hop's src set is its dst set plus ≤ fanout sampled
-        # neighbors per dst, and dedup bounds every level by the graph
-        # itself.  sizes order is input-hop first (batch_device_arrays).
-        caps = [batch]
-        for f in cfg.fanout:
-            caps.append(min(caps[-1] * (1 + f), graph.num_nodes))
-        caps.reverse()
-        self._level_caps = caps
+        # forward, ever — the SAME cap discipline the all-hop fused train
+        # step uses (graph/batch.py:compute_level_caps), so train and
+        # serve share one signature shape per (model, level_caps)
+        self._level_caps = compute_level_caps(batch, cfg.fanout,
+                                              graph.num_nodes)
         self.plane = (plane if plane is not None else
                       make_feature_plane(graph, None, cfg.sampling_device))
         self.sampler = NeighborSampler(graph, cfg.fanout,

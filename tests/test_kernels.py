@@ -137,21 +137,21 @@ def test_segment_agg_all_padded_row():
 
 def test_segment_agg_forwards_interpret_flag(monkeypatch):
     """Regression: the ops wrapper declared ``interpret`` as a static jit
-    arg but never forwarded it to ``neighbor_mean_pallas`` (which defaults
+    arg but never forwarded it to the Pallas entry point (which defaults
     to interpret=True) — on a real TPU/GPU the aggregation kernel would
     silently run interpreted.  Spy on the kernel entry point and assert it
     sees the caller's value for both settings."""
     from repro.kernels.segment_agg import ops as agg_ops
-    from repro.kernels.segment_agg.kernel import neighbor_mean_pallas
+    from repro.kernels.segment_agg.kernel import neighbor_agg_pallas
     seen = []
 
     def spy(idx, h, *args, interpret=True, **kw):
         seen.append(interpret)
         # execute interpreted regardless — compiled Pallas is not
         # available on a CPU test host
-        return neighbor_mean_pallas(idx, h, *args, interpret=True, **kw)
+        return neighbor_agg_pallas(idx, h, *args, interpret=True, **kw)
 
-    monkeypatch.setattr(agg_ops, "neighbor_mean_pallas", spy)
+    monkeypatch.setattr(agg_ops, "neighbor_agg_pallas", spy)
     h = jnp.ones((11, 128), jnp.float32)          # distinctive shape: the
     idx = jnp.zeros((3, 2), jnp.int32)            # jit cache must retrace
     for flag in (True, False):
