@@ -1,0 +1,147 @@
+"""Fault-injection sweep over the cross-host serving fabric: served
+throughput, served p99 and explicit-loss fraction vs injected fault
+severity (serve/transport.py).
+
+Every replica sits behind a ``SimHostTransport`` on a shared
+``VirtualClock``, so the sweep runs in *virtual* milliseconds — one tick
+per fabric step — and is fully deterministic: same seed + same fault
+schedule ⇒ the same numbers, independent of container wall-clock noise
+(jit compiles, CPU contention) that would swamp a real-time measurement
+of millisecond-scale faults.
+
+Two axes of injected trouble, each at rising severity:
+
+  * **response drops** — a fraction of completed responses vanish on the
+    return wire; the fabric recovers each one through its per-request
+    timeout + retry-on-another-replica path, so the visible cost is
+    retries/timeouts and a fatter tail, not silent loss;
+  * **replica kill** — one replica goes down mid-load; its in-flight
+    work is rerouted to survivors, the SLO door shrinks to the surviving
+    capacity, and the conservation ledger still balances.
+
+The headline invariant (the chaos harness proves it request-by-request
+in tests/test_transport_faults.py, the sweep records it at benchmark
+scale): offered == served + shed + timed_out at every severity — every
+admitted query ends somewhere explicit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.a3gnn import A3GNNTrainer
+from repro.graph.partition import plan_partitions
+from repro.graph.synthetic import dataset_like
+from repro.serve.fabric import ServingFabric
+from repro.serve.gnn_engine import GNNRequest
+from repro.serve.transport import FaultSpec, VirtualClock, sim_host_factory
+
+PARTS = 2
+REPLICAS = 2
+BATCH = 4
+HALO = 32
+BASE_LATENCY_MS = 5.0       # modeled one-way host cost on every wire
+TIMEOUT_MS = 12.0           # per-request budget before retry
+SLO_P99_MS = 30.0
+PER_STEP = 6                # offered arrivals per virtual tick (saturating)
+DROP_RATES = (0.0, 0.1, 0.25, 0.45)
+DROP_RATES_QUICK = (0.0, 0.25)
+REQUESTS, REQUESTS_QUICK = 240, 96
+
+
+def _fresh_fabric(graph, cfg, params, faults, seed):
+    clock = VirtualClock(tick_s=1e-3)
+    plan = plan_partitions(graph, PARTS, "locality", seed=0,
+                           halo_budget=HALO)
+    fab = ServingFabric.from_plan(
+        graph, plan, cfg, params, batch=BATCH, replicas=REPLICAS, seed=0,
+        slo_p99_ms=SLO_P99_MS, timeout_ms=TIMEOUT_MS,
+        transport_factory=sim_host_factory(
+            faults=faults, base=FaultSpec(added_latency_ms=BASE_LATENCY_MS),
+            seed=seed),
+        clock=clock)
+    return fab, clock
+
+
+def _drive(fab, clock, nodes):
+    """Paced open-loop offer (PER_STEP per virtual tick) then drain;
+    returns per-level metrics in virtual time."""
+    t0 = clock()
+    i = 0
+    while i < len(nodes):
+        for _ in range(min(PER_STEP, len(nodes) - i)):
+            fab.submit(GNNRequest(rid=i, node=int(nodes[i])))
+            i += 1
+        fab.step()
+    fab.drain()
+    a = fab.audit()
+    assert a["pending"] == 0 and a["inflight"] == 0
+    assert a["offered"] == a["done"] + a["shed"] + a["timed_out"]
+    lat = [(r.t_done - r.t_submit) * 1e3 for r in fab.completed]
+    vsec = clock() - t0
+    fs = fab.fabric_stats()
+    return {
+        "requests": a["offered"], "served": a["done"], "shed": a["shed"],
+        "timed_out": a["timed_out"],
+        "loss_fraction": (a["shed"] + a["timed_out"]) / max(a["offered"], 1),
+        "p50_ms": float(np.percentile(lat, 50)) if lat else 0.0,
+        "p99_ms": float(np.percentile(lat, 99)) if lat else 0.0,
+        "virtual_seconds": vsec,
+        "served_qps_virtual": a["done"] / vsec if vsec else 0.0,
+        "retries": fs["retries"], "timeouts": fs["timeouts"],
+        "reroutes": fs["reroutes"], "fabric_stats": fs,
+    }
+
+
+def run(quick: bool = False):
+    from repro.configs.gnn import gnn_config
+    cfg = gnn_config("products", smoke=True)
+    graph = dataset_like(cfg, seed=0)
+    tr = A3GNNTrainer(graph, cfg, seed=0)
+    rng = np.random.default_rng(0)
+    n_req = REQUESTS_QUICK if quick else REQUESTS
+    # distinct nodes: duplicate in-flight seeds serialize (the unique-seed
+    # invariant) and would couple the levels' queue dynamics
+    nodes = rng.choice(graph.num_nodes, size=n_req, replace=False)
+
+    # -- severity sweep: response drops on every wire --------------------
+    sweep = []
+    for k, rate in enumerate(DROP_RATES_QUICK if quick else DROP_RATES):
+        fab, clock = _fresh_fabric(
+            graph, cfg, tr.params,
+            faults=None if rate == 0.0 else {
+                (p, r): FaultSpec(added_latency_ms=BASE_LATENCY_MS,
+                                  drop_rate=rate)
+                for p in range(PARTS) for r in range(REPLICAS)},
+            seed=11 + k)
+        level = _drive(fab, clock, nodes)
+        level["drop_rate"] = rate
+        sweep.append(level)
+        emit(f"faults/drop{rate:g}_p99", level["p99_ms"] * 1e3,
+             f"served={level['served']}/{level['requests']} "
+             f"loss={level['loss_fraction']:.2f} "
+             f"retries={level['retries']}")
+
+    # -- kill one replica mid-load ---------------------------------------
+    fab, clock = _fresh_fabric(
+        graph, cfg, tr.params,
+        faults={(0, 0): FaultSpec(added_latency_ms=BASE_LATENCY_MS,
+                                  down_at_ms=20.0)},
+        seed=29)
+    kill = _drive(fab, clock, nodes)
+    kill["killed_replica"] = "0/0"
+    emit("faults/kill_replica_p99", kill["p99_ms"] * 1e3,
+         f"served={kill['served']}/{kill['requests']} "
+         f"loss={kill['loss_fraction']:.2f} "
+         f"reroutes={kill['reroutes']} "
+         f"health={kill['fabric_stats']['replicas']['0/0']['health']}")
+
+    results = {
+        "partitions": PARTS, "replicas": REPLICAS, "batch": BATCH,
+        "base_latency_ms": BASE_LATENCY_MS, "timeout_ms": TIMEOUT_MS,
+        "slo_p99_ms": SLO_P99_MS, "per_step": PER_STEP,
+        "requests": n_req,
+        "drop_sweep": sweep, "kill_replica": kill,
+    }
+    save_json("fig_faults", results)
+    return results

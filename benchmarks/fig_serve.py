@@ -183,6 +183,9 @@ def run(quick: bool = False):
         "baseline": base_stats, "fabric": fab_stats,
         "aggregate_speedup": speedup,
         "offered_load": sweep,
+        # observability satellite: FabricStats + per-replica health/EWMA
+        # (all-loopback here, so the transport fault counters are absent)
+        "fabric_stats": fab.fabric_stats(),
     }
     save_json("fig_serve", results)
     return results

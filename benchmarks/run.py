@@ -12,7 +12,8 @@ import time
 import traceback
 
 SUITES = ["table2", "fig6", "fig7", "fig8", "scaleout", "halo", "gather",
-          "serve", "dynamic", "table3", "table4", "kernels", "roofline"]
+          "serve", "faults", "dynamic", "table3", "table4", "kernels",
+          "roofline"]
 
 
 def main() -> None:
@@ -26,14 +27,14 @@ def main() -> None:
 
     from benchmarks import (table2_training, fig6_scalability, fig7_sampling,
                             fig8_parallelism, fig_scaleout, fig_halo,
-                            fig_gather, fig_serve, fig_dynamic,
+                            fig_gather, fig_serve, fig_faults, fig_dynamic,
                             table3_surrogate, table4_autotune, kernels_bench,
                             roofline)
     mods = {"table2": table2_training, "fig6": fig6_scalability,
             "fig7": fig7_sampling, "fig8": fig8_parallelism,
             "scaleout": fig_scaleout, "halo": fig_halo,
             "gather": fig_gather, "serve": fig_serve,
-            "dynamic": fig_dynamic,
+            "faults": fig_faults, "dynamic": fig_dynamic,
             "table3": table3_surrogate, "table4": table4_autotune,
             "kernels": kernels_bench, "roofline": roofline}
 

@@ -27,13 +27,18 @@
 #          (tests/test_gnn_serve.py), the serving-fabric tests
 #          (tests/test_fabric.py — ServingEngine conformance, partition
 #          routing, replica weight refresh, SLO shedding; the saturation
-#          sweep is `slow`-marked and runs in `full`) and the
-#          dynamic-graph differential harness (tests/test_dynamic_graph.py
-#          — delta-CSR overlay vs. compacted sampling parity, incremental
-#          re-balance, topology-consistent serving; the long interleaving
-#          sweep is `slow`-marked) run.  The CI fast job does NOT
-#          install `hypothesis`, keeping the tests/_hypothesis_compat.py
-#          shim path covered.  The kernel/plane/streaming files are
+#          sweep is `slow`-marked and runs in `full`), the cross-host
+#          chaos harness (tests/test_transport_faults.py — transport-seam
+#          conformance, kill/delay/drop fault schedules on a VirtualClock,
+#          conservation + bit-exactness + recovery + determinism; the
+#          peak-load p99 and severity-sweep cases are `slow`-marked), the
+#          SLO admission property tests (tests/test_slo_properties.py)
+#          and the dynamic-graph differential harness
+#          (tests/test_dynamic_graph.py — delta-CSR overlay vs. compacted
+#          sampling parity, incremental re-balance, topology-consistent
+#          serving; the long interleaving sweep is `slow`-marked) run.
+#          The CI fast job does NOT install `hypothesis`, keeping the
+#          tests/_hypothesis_compat.py shim path covered.  The kernel/plane/streaming files are
 #          skipped here (the kernels lane owns them) so the fast job
 #          never runs the interpret-mode Pallas sweeps twice; `full`
 #          still runs everything in one invocation.

@@ -119,6 +119,12 @@ class GNNConfig:
     slo_p99_ms: float = 0.0
     # engines per partition behind the fabric's shared admission scheduler
     serve_replicas: int = 1
+    # per-request fabric timeout (serve/transport.py seam): how long the
+    # fabric waits on a dispatched replica before retrying the request on
+    # another one (once) and then retiring it status=="timeout"; ≤ 0
+    # disables — the fabric waits forever, the pre-seam behavior (safe
+    # in-process, where a response cannot be lost)
+    serve_timeout_ms: float = 0.0
     # training
     lr: float = 3e-3
     dropout: float = 0.0

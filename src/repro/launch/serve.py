@@ -68,7 +68,8 @@ def run_fabric_serve(args, cfg, graph):
     fab = ServingFabric.from_trainer(tr, batch=args.batch,
                                      replicas=args.replicas,
                                      slo_p99_ms=args.slo_p99_ms,
-                                     seed=args.seed)
+                                     seed=args.seed,
+                                     timeout_ms=args.serve_timeout_ms)
     # trigger each replica's one jit compile BEFORE timing anything: a
     # ~250 ms compile inside the first served queries would poison the
     # SLO scheduler's service estimate into shedding the real load
@@ -229,6 +230,10 @@ def main():
     ap.add_argument("--slo-p99-ms", type=float, default=50.0,
                     help="target p99 for SLO-aware admission (0 disables "
                          "shedding; fabric only)")
+    ap.add_argument("--serve-timeout-ms", type=float, default=0.0,
+                    help="per-request fabric timeout before retry-on-"
+                         "another-replica (≤ 0 disables — the pre-seam "
+                         "behavior; fabric only)")
     args = ap.parse_args()
 
     if args.gnn or args.arch.startswith("graphsage"):

@@ -58,18 +58,24 @@ class GNNRequest:
     """One node-prediction query (the GNN twin of engine.py's Request).
 
     ``status`` makes retirement explicit: ``done`` (``pred``/``logits``
-    are real) or ``shed`` (SLO admission dropped it — ``pred`` stays the
-    −1 sentinel and must not be read as a class).  ``partition`` is
-    stamped by the fabric router; −1 means not fabric-routed.
-    ``t_first`` is the slot-admission stamp (TTFT = queue wait for a
-    single-shot query)."""
+    are real), ``shed`` (SLO admission dropped it — ``pred`` stays the
+    −1 sentinel and must not be read as a class) or ``timeout`` (the
+    fabric stopped waiting on every dispatched attempt — same sentinel
+    rule).  ``partition`` is stamped by the fabric router; −1 means not
+    fabric-routed.  ``replica``/``retries`` are the fabric's dispatch
+    record: the last replica the request was sent to, and how many
+    attempts gave up (timer expiry or a replica going down) before this
+    one.  ``t_first`` is the slot-admission stamp (TTFT = queue wait
+    for a single-shot query)."""
     rid: int
     node: int                          # node id to classify (GLOBAL under
     #                                    a fabric; engine-graph-local else)
     pred: int = -1                     # argmax class (valid iff status=="done")
     logits: Optional[np.ndarray] = None  # (num_classes,) float32
-    status: str = "pending"            # pending | done | shed
+    status: str = "pending"            # pending | done | shed | timeout
     partition: int = -1                # owning partition (fabric-routed)
+    replica: int = -1                  # last dispatch target (fabric-stamped)
+    retries: int = 0                   # failed attempts before this one
     # graph topology version at admission (fabric-stamped; −1 = unrouted):
     # a query answers against the topology it was admitted under — edges
     # streamed after the stamp only affect later requests
